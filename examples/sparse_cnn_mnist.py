@@ -1,0 +1,53 @@
+"""Paper reproduction example: the Table-2 MNIST CNN executed end-to-end on
+the OpenEye sparse Pallas kernels (block-sparse weights + activation
+gating), with the Table-3 transmission-vs-processing analysis from the
+calibrated perfmodel.
+
+    PYTHONPATH=src python examples/sparse_cnn_mnist.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.openeye_cnn import CONFIG as CNN
+from repro.core import perfmodel as pm
+from repro.models import cnn
+
+
+def main():
+    params = cnn.init_cnn(jax.random.PRNGKey(0), CNN)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8, 28, 28, 1))
+
+    print(f"network: {[l.kind for l in CNN.layers]}")
+    print(f"full op count: {cnn.op_count(CNN):,} "
+          f"(paper counts {pm.PAPER_OPS:,} — conv3 excluded, see perfmodel)")
+
+    ref = cnn.forward_dense(params, CNN, x)
+    for density in (1.0, 0.5, 0.25):
+        packed = cnn.pack_cnn(params, CNN, density=density)
+        t0 = time.perf_counter()
+        out = cnn.forward_sparse(packed, CNN, x)
+        dt = time.perf_counter() - t0
+        err = float(jnp.abs(out - ref).max() / jnp.abs(ref).max())
+        print(f"density {density:.2f}: rel-err vs dense {err:.2e} "
+              f"({dt*1e3:.0f} ms interpret mode)")
+    # activation gating (Cnvlutin-style) on top of weight sparsity
+    packed = cnn.pack_cnn(params, CNN, density=0.5)
+    out = cnn.forward_sparse(packed, CNN, x, act_threshold=0.05)
+    print(f"dual sparsity (weights 0.5 + act gate 0.05): "
+          f"finite={bool(jnp.isfinite(out).all())}")
+
+    print("\nOpenEye FPGA perfmodel (Table 3 reproduction):")
+    print("rows x y |   send_ns |   proc_ns | MOPS_proc | MOPS_total")
+    for rows, x_, y in [(1, 2, 3), (2, 2, 3), (4, 2, 3), (8, 2, 3),
+                        (8, 4, 3)]:
+        m = pm.evaluate(rows, x_, y)
+        print(f"   {rows} {x_} {y} | {m.send_ns:9.0f} | {m.proc_ns:9.0f} | "
+              f"{m.mops_proc:9.0f} | {m.mops_total:10.0f}")
+    print("-> processing scales ~linearly; transmission saturates total "
+          "throughput (the paper's central claim)")
+
+
+if __name__ == "__main__":
+    main()

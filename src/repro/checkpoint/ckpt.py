@@ -1,0 +1,129 @@
+"""Sharded checkpointing with elastic reshard on restore.
+
+Format: one .npy per pytree leaf + a msgpack manifest holding the tree
+structure, dtypes, and the step.  Restore accepts any mesh/sharding — the
+arrays are placed with ``jax.device_put`` under the *target* sharding, so a
+checkpoint written on a 2x16x16 mesh restores onto 16x16 (or a single CPU
+device) unchanged: elastic scaling across restarts.
+
+``AsyncCheckpointer`` overlaps the serialization with training (snapshot to
+host memory synchronously, write in a background thread) and keeps the last
+K checkpoints (crash-safe: writes go to a tmp dir, atomically renamed).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree: Any) -> None:
+    """Synchronous checkpoint write (atomic via tmp+rename)."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _flatten(tree)
+    manifest = {"step": int(step), "n_leaves": len(leaves),
+                "treedef": str(treedef)}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            arr = arr.astype(np.float32)   # lossless upcast; restore downcasts
+        np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def restore(path: str, target: Any, *, shardings: Optional[Any] = None):
+    """Restore into the structure of ``target`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: matching pytree of NamedShardings for
+    elastic placement onto the current mesh (None = default device)."""
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    leaves, treedef = _flatten(target)
+    if manifest["n_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, target has "
+            f"{len(leaves)} — incompatible trees")
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+        arr = np.load(os.path.join(path, f"leaf_{i}.npy"))
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != {ref.shape}")
+        arr = np.asarray(jnp.asarray(arr).astype(ref.dtype))
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                steps.append(int(name.split("_")[1]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None
+
+
+class AsyncCheckpointer:
+    """Snapshot synchronously, write in the background, keep last K."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any):
+        self.wait()
+        snapshot = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+        path = os.path.join(self.dir, f"step_{step:08d}")
+
+        def _write():
+            save(path, step, snapshot)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.dir)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, target, *, shardings=None):
+        step = latest_step(self.dir)
+        if step is None:
+            return None, None
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        return restore(path, target, shardings=shardings)

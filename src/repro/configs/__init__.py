@@ -1,0 +1,44 @@
+"""Architecture registry: ``get_config(arch_id)`` and the 40 evaluation cells."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    SparsityConfig,
+    cell_is_runnable,
+    reduced,
+)
+
+ARCHS = (
+    "gemma3-4b",
+    "granite-34b",
+    "qwen3-0.6b",
+    "stablelm-12b",
+    "recurrentgemma-9b",
+    "mixtral-8x7b",
+    "dbrx-132b",
+    "whisper-small",
+    "qwen2-vl-72b",
+    "rwkv6-7b",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_") for a in ARCHS}
+_MODULES["openeye-cnn"] = "repro.configs.openeye_cnn"
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def all_cells():
+    """Yield (arch, shape_spec, runnable, reason) for the 40 evaluation cells."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, reason = cell_is_runnable(cfg, shape)
+            yield arch, shape, ok, reason

@@ -1,0 +1,216 @@
+"""Configuration system for the OpenEye-on-TPU framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``; input-shape
+cells are ``ShapeSpec`` entries.  Block *patterns* describe the repeating
+layer-group unit so the runtime can scan over stacked parameter groups
+(the TPU analogue of OpenEye's cluster array: the pattern is the cluster
+micro-architecture, the group count is CLUSTER_ROWS).
+
+Pattern codes (mixer + ffn per layer):
+  "G"  : global (full) causal attention + dense MLP
+  "L"  : local / sliding-window causal attention + dense MLP
+  "GM" : global causal attention + MoE FFN
+  "SM" : sliding-window causal attention + MoE FFN
+  "R"  : RG-LRU recurrent block + dense MLP
+  "W"  : RWKV6 time-mix + channel-mix
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+ATTN_CODES = ("G", "L", "GM", "SM")
+RECURRENT_CODES = ("R", "W")
+
+
+@dataclass(frozen=True)
+class SparsityConfig:
+    """OpenEye's core technique: block-sparse weights (+ optional activation
+    gating), adapted to TPU block granularity.
+
+    kind:   "block"  — unstructured block sparsity (BCSR, bitmap-addressed);
+            "nm"     — N:M structured sparsity stored at block granularity.
+    """
+    kind: str = "block"
+    block_m: int = 128          # rows per weight block (input-feature dim)
+    block_n: int = 128          # cols per weight block (output-feature dim)
+    density: float = 0.5        # fraction of nonzero blocks
+    n: int = 2                  # for N:M
+    m: int = 4
+    act_threshold: Optional[float] = None   # activation magnitude gate
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    pattern: Tuple[str, ...] = ("G",)
+    head_dim: Optional[int] = None
+    sliding_window: int = 4096          # used by "L"/"SM" layers
+    use_qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    mrope: bool = False                 # qwen2-vl M-RoPE (3 position sections)
+    embed_inputs: bool = True           # False => input_specs provides embeddings
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    topk: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 4096          # GShard-style dispatch group length
+    # recurrent (RG-LRU)
+    rnn_width: Optional[int] = None     # d_rnn; default d_model
+    conv_width: int = 4
+    # enc-dec
+    n_enc_layers: int = 0
+    enc_pattern: Tuple[str, ...] = ("G",)
+    # numerics / execution
+    dtype: str = "bfloat16"
+    remat_policy: str = "nothing_saveable"   # nothing_saveable | dots | none
+    scan_layers: bool = True
+    sparsity: Optional[SparsityConfig] = None
+    use_pallas: bool = False            # Pallas path for sparse FFN (interpret on CPU)
+    attn_scores_bf16: bool = False      # store attention score blocks bf16
+    #   (MXU accumulates fp32 internally; halves score HBM traffic — §Perf)
+    # long-context capability: sub-quadratic token mixing available?
+    subquadratic: bool = False
+
+    # ----- derived -----
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.hd
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def tail_pattern(self) -> Tuple[str, ...]:
+        return self.pattern[: self.n_layers % len(self.pattern)]
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def layer_codes(self) -> Tuple[str, ...]:
+        return self.pattern * self.n_groups + self.tail_pattern
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init_params exactly)."""
+        d, ff, hd = self.d_model, self.d_ff, self.hd
+        total = self.vocab_size * d                       # embedding
+        if not self.tie_embeddings:
+            total += d * self.vocab_size                  # lm head
+        total += d                                        # final norm
+        enc = 0
+        for code in (self.enc_pattern * (self.n_enc_layers // max(len(self.enc_pattern), 1))):
+            enc += self._block_params(code, cross=False)
+        total += enc
+        for code in self.layer_codes():
+            total += self._block_params(code, cross=(self.family == "encdec"))
+        return total
+
+    def _block_params(self, code: str, cross: bool = False) -> int:
+        d, ff, hd = self.d_model, self.d_ff, self.hd
+        n = 0
+        if code in ATTN_CODES:
+            n += d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d   # wq wk wv wo
+            n += 2 * d                                                    # norms
+            if self.use_qk_norm:
+                n += 2 * hd
+            if cross:   # decoder cross-attention block
+                n += d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d + d
+        elif code == "R":
+            dr = self.rnn_width or d
+            n += 2 * d * dr            # in proj (x, gate branches)
+            n += dr * d                # out proj
+            n += self.conv_width * dr  # temporal conv
+            n += 2 * self.n_heads * (dr // self.n_heads) ** 2  # block-diag gates
+            n += dr                    # Lambda param
+            n += 2 * d                 # norms
+        elif code == "W":
+            # rwkv6 time-mix: r,k,v,g,o projections + decay lora + token-shift mixers
+            n += 5 * d * d
+            n += d * 64 + 64 * d       # w decay lora
+            n += 6 * d                 # mu mix params (x_r..x_w)
+            n += self.n_heads * self.hd  # time_faaaa bonus u
+            n += 2 * d                 # norms (ln1 + ln2 analogue)
+        if code in ("G", "L"):
+            n += 3 * d * ff            # gate, up, down
+        elif code in ("GM", "SM"):
+            n += d * self.n_experts                   # router
+            n += self.n_experts * 3 * d * ff          # expert FFNs
+        elif code == "R":
+            n += 3 * d * ff
+        elif code == "W":
+            # channel-mix: k (d->ff), v (ff->d), r (d->d)
+            n += d * ff + ff * d + d * d + 2 * d
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        inactive_ffn = (self.n_experts - self.topk) * 3 * d * ff
+        n_moe_layers = sum(1 for c in self.layer_codes() if c in ("GM", "SM"))
+        return self.param_count() - n_moe_layers * inactive_ffn
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k":    ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether an (arch x shape) cell runs, per the sub-quadratic rule."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: long_500k skipped (see DESIGN.md)"
+    return True, ""
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    base = dict(
+        n_layers=max(len(cfg.pattern), 2) if len(cfg.pattern) > 1 else 2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads > 1 else 1,
+        d_ff=128,
+        vocab_size=512,
+        head_dim=16,
+        sliding_window=32,
+        moe_group_size=64,
+        rnn_width=64 if cfg.rnn_width else None,
+        n_experts=4 if cfg.n_experts else 0,
+        topk=min(cfg.topk, 2) if cfg.topk else 0,
+        n_enc_layers=2 if cfg.n_enc_layers else 0,
+        scan_layers=cfg.scan_layers,
+    )
+    base.update(overrides)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **base)

@@ -1,0 +1,20 @@
+"""dbrx-132b [moe]: 40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352.
+
+Fine-grained MoE: 16 experts top-4. Pure full attention -> long_500k skipped.
+[hf:databricks/dbrx-base; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    pattern=("GM",),
+    n_experts=16,
+    topk=4,
+)

@@ -1,0 +1,24 @@
+"""gemma3-4b [dense]: 34L d_model=2560 8H (GQA kv=4) d_ff=10240 vocab=262144.
+
+5:1 local:global attention pattern, 128k context design -> long_500k RUNS
+(local layers use a 1024-token window; global layers are linear-per-token at
+decode).  [hf:google/gemma-3-1b-pt; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    family="dense",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=10240,
+    vocab_size=262144,
+    pattern=("L", "L", "L", "L", "L", "G"),
+    sliding_window=1024,
+    rope_theta=1_000_000.0,
+    use_qk_norm=True,
+    tie_embeddings=True,
+    subquadratic=True,
+)

@@ -1,0 +1,35 @@
+"""The paper's own evaluation network (Table 2): 8-bit MNIST CNN, ~2.13 MOPs.
+
+Used for the faithful reproduction of Table 3 / Fig 6 and the sparse-kernel
+end-to-end example. Not part of the 40 LM cells.
+"""
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class CNNLayer:
+    kind: str                  # conv | pool | dense
+    out_ch: int = 0
+    kernel: int = 3
+    stride: int = 1
+    pool: int = 2
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str = "openeye-cnn"
+    input_hw: Tuple[int, int] = (28, 28)
+    input_ch: int = 1
+    layers: Tuple[CNNLayer, ...] = (
+        CNNLayer("conv", out_ch=16, kernel=3),
+        CNNLayer("pool", pool=2),
+        CNNLayer("conv", out_ch=32, kernel=3),
+        CNNLayer("pool", pool=2),
+        CNNLayer("conv", out_ch=32, kernel=3),
+        CNNLayer("dense", out_ch=32),
+        CNNLayer("dense", out_ch=10),
+    )
+
+
+CONFIG = CNNConfig()

@@ -1,0 +1,23 @@
+"""recurrentgemma-9b [hybrid]: 38L d_model=4096 16H (GQA kv=1) d_ff=12288 vocab=256000.
+
+Griffin pattern: (RG-LRU, RG-LRU, local-attn) repeating, window 2048.
+Sub-quadratic -> long_500k RUNS. [arXiv:2402.19427; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    pattern=("R", "R", "L"),
+    sliding_window=2048,
+    rnn_width=4096,
+    conv_width=4,
+    tie_embeddings=True,
+    subquadratic=True,
+)

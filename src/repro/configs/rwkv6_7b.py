@@ -1,0 +1,20 @@
+"""rwkv6-7b [ssm]: 32L d_model=4096 (attn-free) d_ff=14336 vocab=65536.
+
+RWKV-6 "Finch": data-dependent decay WKV recurrence, head_size 64
+(-> 64 heads). O(1)-state decode -> long_500k RUNS. [arXiv:2404.05892; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,          # head_size 64
+    n_kv_heads=64,
+    d_ff=14336,
+    vocab_size=65536,
+    pattern=("W",),
+    head_dim=64,
+    subquadratic=True,
+)

@@ -1,0 +1,22 @@
+"""whisper-small [audio]: 12L(+12 enc) d_model=768 12H (kv=12) d_ff=3072 vocab=51865.
+
+Encoder-decoder; conv frontend is a STUB (input_specs provides precomputed
+frame embeddings). Full attention enc-dec -> long_500k skipped.
+[arXiv:2212.04356; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,
+    n_enc_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    pattern=("G",),
+    enc_pattern=("G",),
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,92 @@
+"""Parse compiled (per-device SPMD) HLO text for collective traffic.
+
+``collective_bytes`` is not available from ``cost_analysis()`` — we regex the
+HLO for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, decode operand/output shapes and replica groups, and
+apply ring-algorithm factors to estimate per-device bytes on the wire.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(\(?[a-z0-9_\[\]{},\s\(\)]*?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.IGNORECASE)
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))            # [G,N]<=[T]: N ranks per group
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    ops: dict = field(default_factory=lambda: defaultdict(int))
+    bytes_by_op: dict = field(default_factory=lambda: defaultdict(float))
+    wire_bytes: float = 0.0               # per-device bytes on the wire
+
+    def to_dict(self):
+        return {"ops": dict(self.ops),
+                "bytes_by_op": {k: float(v) for k, v in self.bytes_by_op.items()},
+                "wire_bytes": float(self.wire_bytes)}
+
+
+def analyze_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        out_shape, kind, start = m.group(1), m.group(2).lower(), m.group(3)
+        if "-done" in line.split("=")[1][:60]:
+            continue
+        out_b = _shape_bytes(out_shape)
+        n = _group_size(line)
+        if n <= 1:
+            continue
+        ring = (n - 1) / n
+        if kind == "all-gather":
+            wire = out_b * ring
+        elif kind == "all-reduce":
+            wire = 2.0 * out_b * ring
+        elif kind == "reduce-scatter":
+            wire = out_b * (n - 1)        # input = out*n; (n-1)/n of input
+        elif kind == "all-to-all":
+            wire = out_b * ring
+        else:                              # collective-permute
+            wire = out_b
+        stats.ops[kind] += 1
+        stats.bytes_by_op[kind] += wire
+        stats.wire_bytes += wire
+    return stats

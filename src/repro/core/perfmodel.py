@@ -1,0 +1,149 @@
+"""Analytic performance model of the OpenEye FPGA accelerator.
+
+Reproduces the paper's Table 3 / Fig 6 (16 configurations on a ZU19EG at
+200 MHz, 64-bit stream port) from first principles plus four calibrated
+constants.  Mean error ~3% (processing) / ~4% (transmission) across all 16
+rows; see tests/test_perfmodel.py.
+
+Reproduction findings (validated against the paper's own numbers):
+  * The paper's "~2.13 MOPs" op count is EXACTLY 2*(conv1+conv2+dense1+
+    dense2) MACs = 2,133,120 — **conv3 is excluded**, and processing times
+    are only consistent with conv3 never executing (including it predicts
+    ~316us for config (1,2,3) vs the measured 228.6us).  The effective
+    measured network is {conv1, pool, conv2, pool, dense1, dense2}.
+  * Processing throughput implies 4 MACs/PE/cycle (the paper's SIMD
+    parameterization) with Y-dim efficiency min(Y,3)/Y for 3x3 convs —
+    matching the paper's observation that PE-Y scaling only helps dense
+    layers.
+  * Transmission time fits a model where conv weights are duplicated per
+    cluster up to ceil(H_out/X) copies and dense1 weights up to
+    ceil(4/X) copies, all scaled by Y/3 (weight-row padding), on top of a
+    fixed ~53 kB configuration/handshake stream — transmission grows with
+    cluster count and then saturates, which is precisely the
+    paper's "communication becomes the bottleneck" mechanism.
+
+The same decomposition (send ~ collective term, proc ~ compute term) is what
+the TPU roofline in core/roofline.py applies to the LM cells.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+# ---- hardware constants (from the paper) ----
+CLK_NS = 5.0                  # 200 MHz
+SIMD = 4                      # MACs / PE / cycle (calibrated; see above)
+BUS_BYTES_PER_NS = 1.6        # 64-bit port @ 200 MHz = 1.6 GB/s
+
+# ---- the measured network (Table 2, conv3 never executed — see above) ----
+CONV_LAYERS = (                # (MACs, weight_bytes, H_out)
+    (28 * 28 * 16 * 9 * 1, 9 * 1 * 16, 28),
+    (14 * 14 * 32 * 9 * 16, 9 * 16 * 32, 14),
+)
+DENSE_LAYERS = (               # (MACs, weight_bytes)
+    (1568 * 32, 1568 * 32),
+    (32 * 10, 32 * 10),
+)
+INPUT_BYTES = 28 * 28
+
+PAPER_OPS = 2 * (sum(m for m, _, _ in CONV_LAYERS) +
+                 sum(m for m, _ in DENSE_LAYERS))          # = 2,133,120
+
+# ---- calibrated constants (least-squares vs Table 3; see benchmarks) ----
+PROC_OVERHEAD_NS = 9925.0     # pipeline fill/drain floor
+PROC_OVERHEAD_PER_LOG2R = 2563.0
+SEND_BASE_BYTES = 47.89 * (INPUT_BYTES + DENSE_LAYERS[1][1])   # config stream
+CONV_ENC = 1.46               # sparse CSC addressing overhead on conv weights
+DENSE_ENC = 1.12
+DENSE_DUP_CAP = 4             # dense1 duplicated ceil(cap/X) times
+
+
+def proc_ns(rows: int, pe_x: int, pe_y: int) -> float:
+    """Processing time (ns) for CLUSTER_ROWS x (PE_X, PE_Y)."""
+    conv_macs = sum(m for m, _, _ in CONV_LAYERS)
+    dense_macs = sum(m for m, _ in DENSE_LAYERS)
+    cyc = conv_macs / (SIMD * rows * pe_x * min(pe_y, 3)) \
+        + dense_macs / (SIMD * rows * pe_x * pe_y)
+    return cyc * CLK_NS + PROC_OVERHEAD_NS \
+        + PROC_OVERHEAD_PER_LOG2R * math.log2(rows)
+
+
+def send_ns(rows: int, pe_x: int, pe_y: int) -> float:
+    """Data transmission time (ns): weights/config streamed at 1.6 GB/s,
+    duplicated per cluster up to the layer's usable parallelism."""
+    ymul = pe_y / 3.0
+    conv_bytes = sum(
+        wb * min(rows, math.ceil(h / pe_x)) for _, wb, h in CONV_LAYERS)
+    dense_bytes = DENSE_LAYERS[0][1] * min(rows, math.ceil(DENSE_DUP_CAP / pe_x))
+    total = SEND_BASE_BYTES + CONV_ENC * conv_bytes * ymul \
+        + DENSE_ENC * dense_bytes * ymul
+    return total / BUS_BYTES_PER_NS
+
+
+@dataclass
+class PerfPoint:
+    rows: int
+    pe_x: int
+    pe_y: int
+    send_ns: float
+    proc_ns: float
+
+    @property
+    def total_ns(self) -> float:
+        return self.send_ns + self.proc_ns
+
+    @property
+    def mops_proc(self) -> float:
+        return PAPER_OPS / (self.proc_ns * 1e-9) / 1e6
+
+    @property
+    def mops_total(self) -> float:
+        return PAPER_OPS / (self.total_ns * 1e-9) / 1e6
+
+
+def evaluate(rows: int, pe_x: int, pe_y: int) -> PerfPoint:
+    return PerfPoint(rows, pe_x, pe_y,
+                     send_ns(rows, pe_x, pe_y), proc_ns(rows, pe_x, pe_y))
+
+
+# ---- resource model (Fig 5: strictly linear in cluster count) ----
+
+def resources(rows: int, pe_x: int, pe_y: int) -> dict:
+    """CLB/BRAM/DSP counts: linear in clusters and PEs (Fig 5's claim).
+    Per-PE/per-cluster unit costs estimated from ZU19EG-class budgets."""
+    pes = rows * pe_x * pe_y
+    return {
+        "DSP": pes * SIMD,                       # SIMD multipliers per PE
+        "BRAM": rows * 12 + pes * 4,             # iact/weight/psum RAMs
+        "CLB": rows * 900 + pes * 450 + 2500,    # routers + PE ctl + frontend
+    }
+
+
+# ---- the paper's measured Table 3, for validation ----
+PAPER_TABLE3 = (
+    # rows, x, y, send_ns, proc_ns, total_ns, mops_proc, mops_total
+    (1, 2, 3, 70680, 228635, 299315, 9330, 7127),
+    (2, 2, 3, 106720, 124545, 231265, 17127, 9224),
+    (4, 2, 3, 131235, 71475, 202710, 29844, 10523),
+    (8, 2, 3, 132995, 44525, 177520, 47908, 12016),
+    (1, 4, 3, 71960, 127270, 199230, 16761, 10707),
+    (2, 4, 3, 83680, 70325, 154005, 30332, 13851),
+    (4, 4, 3, 85225, 42785, 128010, 49857, 16664),
+    (8, 4, 3, 85580, 29760, 115340, 71677, 18494),
+    (1, 2, 4, 82785, 223310, 306095, 9552, 6969),
+    (2, 2, 4, 130660, 122020, 252680, 17482, 8442),
+    (4, 2, 4, 162355, 70180, 232535, 30395, 9173),
+    (8, 2, 4, 163135, 48745, 211880, 43761, 10068),
+    (1, 4, 4, 84045, 121060, 205105, 17620, 10400),
+    (2, 4, 4, 99920, 67540, 167460, 31583, 12738),
+    (4, 4, 4, 100985, 41380, 142365, 51550, 14983),
+    (8, 4, 4, 99915, 29250, 129165, 72927, 16515),
+)
+
+
+def table3_comparison():
+    """Yield (config, paper_point, model_point, rel_err_send, rel_err_proc)."""
+    for rows, x, y, s, p, *_ in PAPER_TABLE3:
+        m = evaluate(rows, x, y)
+        yield ((rows, x, y), (s, p), (m.send_ns, m.proc_ns),
+               abs(m.send_ns - s) / s, abs(m.proc_ns - p) / p)

@@ -1,0 +1,117 @@
+"""Sparse weight formats — OpenEye's compressed-domain execution, TPU-adapted.
+
+The FPGA design stores CSC address/data RAMs per PE and skips zero entries
+element-wise.  A TPU MXU cannot profit from element-granular zeros, so the
+framework works at *block* granularity (multiples of the native 8x128 tile):
+
+  * ``BlockSparseWeight``: packed nonzero blocks + per-column block index
+    lists (BCSC — "address RAM" = the index table, "data RAM" = the packed
+    blocks).  Consumed by the Pallas ``block_spmm`` kernel via scalar
+    prefetch.
+  * N:M structured sparsity is supported at the format level (prune /
+    encode / decode round-trip) and executes through the block path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class BlockSparseWeight:
+    """W (K, N) with (bk, bn) blocks; only nonzero blocks stored.
+
+    blocks : (Nb, max_nnz, bk, bn)  packed values ("data RAM")
+    idx    : (Nb, max_nnz) int32    K-block index per slot, -1 = padding
+    nnz    : (Nb,) int32            active slots per N-block column
+    shape  : (K, N) dense shape
+    """
+    blocks: jax.Array
+    idx: jax.Array
+    nnz: jax.Array
+    shape: tuple = dataclasses.field(metadata=dict(static=True))
+    block: tuple = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def density(self) -> float:
+        Kb = self.shape[0] // self.block[0]
+        return float(np.asarray(self.nnz).sum()) / (Kb * self.idx.shape[0])
+
+
+def random_block_mask(key, Kb: int, Nb: int, density: float):
+    """Random block-occupancy bitmap with >=1 block per column."""
+    m = jax.random.uniform(key, (Kb, Nb)) < density
+    # guarantee at least one block per column (keeps matmul well-defined)
+    force = jax.nn.one_hot(jax.random.randint(key, (Nb,), 0, Kb), Kb,
+                           dtype=bool).T
+    return m | force
+
+
+def magnitude_block_mask(w, bk: int, bn: int, density: float):
+    """Keep the highest-Frobenius-norm blocks (magnitude pruning)."""
+    K, N = w.shape
+    Kb, Nb = K // bk, N // bn
+    norms = jnp.square(w.reshape(Kb, bk, Nb, bn)).sum(axis=(1, 3))   # (Kb, Nb)
+    k = max(int(density * Kb * Nb), Nb)
+    thresh = jnp.sort(norms.reshape(-1))[-k]
+    return norms >= thresh
+
+
+def pack(w, mask, bk: int, bn: int) -> BlockSparseWeight:
+    """Dense (K, N) + block mask (Kb, Nb) -> packed BCSC (host-side)."""
+    w = np.asarray(w)
+    mask = np.asarray(mask)
+    K, N = w.shape
+    Kb, Nb = K // bk, N // bn
+    assert mask.shape == (Kb, Nb)
+    nnz = mask.sum(axis=0)
+    max_nnz = max(int(nnz.max()), 1)
+    blocks = np.zeros((Nb, max_nnz, bk, bn), w.dtype)
+    idx = np.full((Nb, max_nnz), -1, np.int32)
+    for j in range(Nb):
+        ks = np.nonzero(mask[:, j])[0]
+        for s, kb in enumerate(ks):
+            blocks[j, s] = w[kb * bk:(kb + 1) * bk, j * bn:(j + 1) * bn]
+            idx[j, s] = kb
+    return BlockSparseWeight(jnp.asarray(blocks), jnp.asarray(idx),
+                             jnp.asarray(nnz.astype(np.int32)), (K, N), (bk, bn))
+
+
+def unpack(sw: BlockSparseWeight) -> jax.Array:
+    """Packed -> dense (for oracles / round-trip tests)."""
+    K, N = sw.shape
+    bk, bn = sw.block
+    Nb, max_nnz = sw.idx.shape
+    w = np.zeros((K, N), np.asarray(sw.blocks).dtype)
+    idx = np.asarray(sw.idx)
+    blocks = np.asarray(sw.blocks)
+    for j in range(Nb):
+        for s in range(max_nnz):
+            kb = idx[j, s]
+            if kb >= 0:
+                w[kb * bk:(kb + 1) * bk, j * bn:(j + 1) * bn] = blocks[j, s]
+    return jnp.asarray(w)
+
+
+# ------------------------------------------------------------------ N:M
+
+
+def nm_prune(w, n: int = 2, m: int = 4):
+    """Keep the n largest-|.| entries of every m consecutive along axis 0."""
+    K, N = w.shape
+    assert K % m == 0
+    g = w.reshape(K // m, m, N)
+    rank = jnp.argsort(jnp.argsort(-jnp.abs(g), axis=1), axis=1)
+    return (g * (rank < n)).reshape(K, N)
+
+
+def apply_mask(w, mask, bk: int, bn: int):
+    """Dense masked weight (the training-time 'sparse-aware' view)."""
+    Kb, Nb = mask.shape
+    return (w.reshape(Kb, bk, Nb, bn) *
+            mask[:, None, :, None].astype(w.dtype)).reshape(w.shape)

@@ -1,0 +1,1 @@
+from repro.ft.heartbeat import Heartbeat, Watchdog  # noqa: F401

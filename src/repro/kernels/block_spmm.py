@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: dense activations x block-sparse weights (BCSC).
+
+The TPU-native adaptation of OpenEye's sparse PE datapath:
+  * the per-column block index table (the "address RAM") is *scalar
+    prefetched* so the grid only visits nonzero blocks — zero blocks cost
+    neither FLOPs nor HBM->VMEM DMA, the same two savings the FPGA design
+    gets from its CSC encoding;
+  * the VMEM f32 scratch accumulator revisited along the sparse-K grid
+    dimension is the "PSUM RAM" (the LVT multi-port trick has no TPU
+    analogue — VMEM is software-scheduled; see DESIGN.md);
+  * block shapes default to (bm, bk, bn) = (128, 128, 128): MXU-aligned.
+
+y[i, j] = sum_s x[i, idx[j, s]] @ blocks[j, s]      (s < nnz[j])
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sparsity import BlockSparseWeight
+
+
+def _kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, max_nnz: int):
+    j = pl.program_id(1)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # padded slots (idx < 0) are skipped: no MACs issued (the Cnvlutin-style
+    # compute gate); their DMA is aliased to block 0 by the index_map.
+    @pl.when(idx_ref[j, s] >= 0)
+    def _mac():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[0, 0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(s == max_nnz - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def block_spmm(x, sw: BlockSparseWeight, *, bm: int = 128, interpret: bool = True):
+    """x: (M, K) @ BCSC weight -> (M, N)."""
+    M, K = x.shape
+    Kn, N = sw.shape
+    assert K == Kn, (x.shape, sw.shape)
+    bk, bn = sw.block
+    Nb, max_nnz = sw.idx.shape
+    bm = min(bm, M)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0
+
+    grid = (M // bm, Nb, max_nnz)
+
+    def x_map(i, j, s, idx_ref):
+        kb = idx_ref[j, s]
+        return (i, jnp.maximum(kb, 0))          # alias padded slots to block 0
+
+    def w_map(i, j, s, idx_ref):
+        return (j, s, 0, 0)
+
+    def o_map(i, j, s, idx_ref):
+        return (i, j)
+
+    kernel = functools.partial(_kernel, max_nnz=max_nnz)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), x_map),
+                pl.BlockSpec((1, 1, bk, bn), w_map),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), o_map),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(sw.idx, x, sw.blocks)

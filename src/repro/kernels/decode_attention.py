@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: single-token GQA decode attention (flash-decoding).
+
+Grid walks KV blocks sequentially per (batch, kv-head); online-softmax
+max/sum/accumulator live in VMEM scratch — the direct TPU analogue of
+OpenEye's hierarchical PSUM accumulation (partial sums flow "vertically"
+through the grid instead of through PE columns).  Ring-buffer caches are
+handled by masking on the per-slot position array, matching the serving
+layer's cache semantics.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, t_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, blocks: int, window, scale: float):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                    # (G, D)
+    k = k_ref[0, :, 0]                 # (bL, D)
+    v = v_ref[0, :, 0]                 # (bL, D)
+    pos = pos_ref[0]                   # (bL,)
+    t = t_ref[0]
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    valid = (pos >= 0) & (pos <= t)
+    if window is not None:
+        valid &= pos > t - window
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+
+    m_prev = m_ref[...]                # (G, 1)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+    p = jnp.exp(scores - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == blocks - 1)
+    def _store():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_l", "interpret"))
+def decode_attention(q, k, v, pos, t, *, window=None, block_l: int = 512,
+                     interpret: bool = True):
+    """q: (B, Hq, D); k/v: (B, L, Hkv, D); pos: (B, L) slot positions
+    (-1 empty); t: scalar current position. Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    L, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    block_l = min(block_l, L)
+    assert L % block_l == 0
+    blocks = L // block_l
+    grid = (B, Hkv, blocks)
+
+    qg = q.reshape(B, Hkv, G, D)
+    t_arr = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (1,))
+
+    kernel = functools.partial(_kernel, blocks=blocks, window=window,
+                               scale=1.0 / math.sqrt(D))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_l, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, block_l, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, block_l), lambda b, h, s: (b, s)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qg, k, v, pos, t_arr)
+    return out.reshape(B, Hq, D)

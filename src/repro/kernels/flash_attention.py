@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: causal/windowed GQA flash-attention forward.
+
+The §Perf analysis (EXPERIMENTS.md, qwen3 iteration 2) showed materialized
+attention-score blocks are ~85% of the memory roofline term for train/
+prefill — this kernel keeps the score tile in VMEM between the two MXU
+dots (the flash-attention fusion), so scores never touch HBM.  Online
+max/sum/accumulator scratch revisited along the KV grid dimension is the
+same PSUM-accumulation idiom as the other OpenEye kernels.
+
+Causal/windowed blocks fully outside the band are skipped with ``@pl.when``
+— static-ish work skipping, the attention analogue of zero-block skipping
+in block_spmm.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, nk: int, causal: bool, window, scale: float):
+    i = pl.program_id(2)          # q block
+    s = pl.program_id(3)          # kv block
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = i * bq
+    k0 = s * bk
+    # band check: causal => need k0 <= q0 + bq - 1 ; window => k0 + bk - 1 >
+    # q0 - window  (positions are absolute; q_offset=0 for train/prefill)
+    live = jnp.asarray(True)
+    if causal:
+        live &= k0 <= q0 + bq - 1
+    if window is not None:
+        live &= (k0 + bk - 1) > (q0 - window)
+
+    @pl.when(live)
+    def _mac():
+        q = q_ref[0, :, 0]                 # (bq, G, D)
+        G, D = q.shape[1], q.shape[2]
+        k = k_ref[0, :, 0]                 # (bk, D)
+        v = v_ref[0, :, 0]                 # (bk, D)
+        qf = q.reshape(bq * G, D)
+        scores = jnp.dot(qf, k.T, preferred_element_type=jnp.float32) * scale
+        if causal or window is not None:
+            qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, G), 0) \
+                .reshape(bq * G)
+            kpos = k0 + jax.lax.iota(jnp.int32, bk)
+            mask = jnp.ones((bq * G, bk), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            scores = jnp.where(mask, scores, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+        p = jnp.exp(scores - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(s == nk - 1)
+    def _store():
+        G = q_ref.shape[3]
+        D = q_ref.shape[4]
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0] = out.reshape(bq, G, D).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: bool = True):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
+
+    GQA-aware (Hq = Hkv * G); scores live only in VMEM."""
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    nq, nk = Sq // bq, Skv // bk
+    qg = q.reshape(B, Sq, Hkv, G, D)
+
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+                               window=window, scale=1.0 / math.sqrt(D))
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, G, D), lambda b, h, i, s: (b, i, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, G, D), lambda b, h, i, s: (b, i, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq * G, 1), jnp.float32),
+            pltpu.VMEM((bq * G, 1), jnp.float32),
+            pltpu.VMEM((bq * G, D), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hkv, G, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qg, k, v)
+    return out.reshape(B, Sq, Hq, D)

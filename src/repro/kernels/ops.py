@@ -1,0 +1,109 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU the kernels execute in interpret mode (correctness path, used by
+tests and the paper-CNN example); on a real TPU set ``interpret=False``.
+``sparse_conv2d`` lowers the paper's 3x3 convolutions to im2col +
+``block_spmm`` — the same "convolution as matmul over streamed activation
+rows" mapping the OpenEye PE array realizes spatially.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import BlockSparseWeight, pack, random_block_mask
+from repro.kernels.block_spmm import block_spmm
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.dual_sparse import dual_sparse_matmul
+
+__all__ = ["block_spmm", "dual_sparse_matmul", "decode_attention",
+           "sparse_conv2d", "im2col", "sparse_dense"]
+
+
+def im2col(x, kh: int, kw: int, *, stride: int = 1):
+    """x: (B, H, W, C) -> patches (B*Ho*Wo, kh*kw*C), SAME padding."""
+    B, H, W, C = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    Ho, Wo = H // stride, W // stride
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(jax.lax.slice(
+                xp, (0, i, j, 0), (B, i + H, j + W, C),
+                (1, stride, stride, 1)))
+    patches = jnp.concatenate(cols, axis=-1)           # (B, Ho, Wo, kh*kw*C)
+    return patches.reshape(B * Ho * Wo, kh * kw * C), (B, Ho, Wo)
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def sparse_conv2d(x, sw: BlockSparseWeight, meta, *, act_threshold=None,
+                  interpret: bool = True):
+    """Conv via im2col + block-sparse matmul.
+
+    x: (B, H, W, Cin); sw packs the (kh*kw*Cin, Cout) weight matrix, padded
+    to block multiples; meta: (kh, kw, Cin, Cout, stride).
+    """
+    kh, kw, cin, cout, stride = meta
+    patches, (B, Ho, Wo) = im2col(x, kh, kw, stride=stride)
+    patches = _pad_to(patches, sw.block[0], axis=1)
+    M = patches.shape[0]
+    bm = 128 if M % 128 == 0 else _largest_divisor(M, 128)
+    if act_threshold is not None:
+        y = dual_sparse_matmul(patches, sw, act_threshold=float(act_threshold),
+                               bm=bm, interpret=interpret)
+    else:
+        y = block_spmm(patches, sw, bm=bm, interpret=interpret)
+    return y[:, :cout].reshape(B, Ho, Wo, cout)
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    d = min(cap, n)
+    while n % d:
+        d -= 1
+    return d
+
+
+def pack_conv_weight(w, bk: int = 128, bn: int = 128, density: float = 1.0,
+                     mask=None):
+    """(kh, kw, Cin, Cout) -> BCSC over the im2col matrix (padded)."""
+    kh, kw, cin, cout = w.shape
+    wm = jnp.asarray(w).reshape(kh * kw * cin, cout)
+    wm = _pad_to(_pad_to(wm, bk, 0), bn, 1)
+    K, N = wm.shape
+    if mask is None:
+        if density >= 1.0:
+            mask = jnp.ones((K // bk, N // bn), bool)
+        else:
+            mask = random_block_mask(jax.random.PRNGKey(0), K // bk, N // bn,
+                                     density)
+    return pack(wm, mask, bk, bn), (kh, kw, cin, cout, 1)
+
+
+def sparse_dense(x, sw: BlockSparseWeight, *, act_threshold=None,
+                 interpret: bool = True):
+    """Dense layer via the sparse kernels; x: (..., K)."""
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])
+    xm = _pad_to(xm, sw.block[0], 1)
+    M = xm.shape[0]
+    bm = _largest_divisor(M, 128)
+    if act_threshold is not None:
+        y = dual_sparse_matmul(xm, sw, act_threshold=float(act_threshold),
+                               bm=bm, interpret=interpret)
+    else:
+        y = block_spmm(xm, sw, bm=bm, interpret=interpret)
+    return y.reshape(*lead, sw.shape[1])
+
+
+def flash_attention(*args, **kwargs):
+    from repro.kernels.flash_attention import flash_attention as _fa
+    return _fa(*args, **kwargs)

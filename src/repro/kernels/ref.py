@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import BlockSparseWeight, apply_mask, unpack
+
+
+def block_spmm_ref(x, sw: BlockSparseWeight):
+    """x: (M, K) @ block-sparse W (K, N) -> (M, N), dense oracle."""
+    w = unpack(sw)
+    return jnp.asarray(x) @ w.astype(x.dtype)
+
+
+def masked_matmul_ref(x, w, mask, bk: int, bn: int):
+    """x @ (w masked at block granularity)."""
+    return x @ apply_mask(w, mask, bk, bn).astype(x.dtype)
+
+
+def dual_sparse_ref(x, sw: BlockSparseWeight, act_threshold: float,
+                    bm: int = 128):
+    """OpenEye dual sparsity oracle: (bm x bk) activation blocks whose
+    max-|.| is below the threshold are treated as zero (Cnvlutin-style
+    gating at TPU block granularity), weights are block-sparse."""
+    bk = sw.block[0]
+    M, K = x.shape
+    bm = min(bm, M)
+    Mb, Kb = M // bm, K // bk
+    blk = x.reshape(Mb, bm, Kb, bk)
+    keep = jnp.abs(blk).max(axis=(1, 3)) > act_threshold    # (Mb, Kb)
+    xg = (blk * keep[:, None, :, None]).reshape(M, K)
+    return block_spmm_ref(xg, sw)
+
+
+def decode_attention_ref(q, k, v, pos, t, *, window=None):
+    """q: (B, Hq, D); k/v: (B, L, Hkv, D); pos: (B, L); t scalar."""
+    B, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,blhd->bhgl", qg, k.astype(jnp.float32)) / jnp.sqrt(1.0 * D)
+    valid = (pos >= 0) & (pos <= t)
+    if window is not None:
+        valid &= pos > t - window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgl,blhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, D)
+
+
+def conv2d_ref(x, w, *, stride: int = 1, padding: str = "SAME"):
+    """x: (B, H, W, Cin); w: (kh, kw, Cin, Cout) — NHWC conv oracle."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST precede any jax import — jax locks the
+# device count on first initialization.
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, cell_is_runnable, get_config  # noqa: E402
+from repro.core import hlo_cost  # noqa: E402
+from repro.core.roofline import Roofline, model_flops_for_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import specs as SP  # noqa: E402
+from repro.models import model_api  # noqa: E402
+from repro.sharding import partition as sp  # noqa: E402
+from repro.train.optimizer import OptConfig, init_opt_state  # noqa: E402
+from repro.train.step import build_train_step  # noqa: E402
+
+OUTDIR_DEFAULT = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+
+def _named(tree_pspecs, mesh):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), tree_pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _opt_pspecs(param_pspecs_tree):
+    """Optimizer state shardings mirror the parameter shardings."""
+    mu_v = jax.tree_util.tree_map(
+        lambda spec: {"m": spec, "v": spec}, param_pspecs_tree,
+        is_leaf=lambda x: isinstance(x, P))
+    return {"mu_v": mu_v, "count": P()}
+
+
+def _as_bf16(tree):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if jnp.issubdtype(s.dtype, jnp.floating) else s, tree)
+
+
+def build_cell(cfg, shape, mesh):
+    """Returns (fn, abstract_args, in_shardings, out_shardings)."""
+    api = model_api(cfg)
+    aparams = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_pspecs = sp.param_pspecs(aparams)
+    p_shard = _named(p_pspecs, mesh)
+    ispecs = SP.input_specs(cfg, shape)
+    i_shard = SP.input_shardings(cfg, shape, ispecs)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt_cfg = OptConfig()
+        aopt = jax.eval_shape(lambda p: init_opt_state(opt_cfg, p), aparams)
+        o_shard = _named(_opt_pspecs(p_pspecs), mesh)
+        step_fn = build_train_step(api, opt_cfg)
+        fn = step_fn
+        args = (aparams, aopt, ispecs, jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (p_shard, o_shard, i_shard, rep)
+        out_sh = (p_shard, o_shard, None)
+        return fn, args, in_sh, out_sh
+
+    sparams = _as_bf16(aparams)
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return api.forward_prefill(params, batch)
+        return fn, (sparams, ispecs), (p_shard, i_shard), None
+
+    # decode
+    acache = SP.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    c_pspecs = SP.cache_pspecs(acache, shape.global_batch)
+    c_shard = _named(c_pspecs, mesh)
+
+    def fn(params, tokens, cache, t):
+        return api.forward_decode(params, tokens, cache, t)
+
+    args = (sparams, ispecs["tokens"], acache,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    in_sh = (p_shard, i_shard["tokens"], c_shard, rep)
+    out_sh = (None, c_shard)
+    return fn, args, in_sh, out_sh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+             tag: str = "baseline", profile: str = "baseline",
+             scores_bf16: bool = False) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if scores_bf16:
+        cfg = dataclasses.replace(cfg, attn_scores_bf16=True)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+           "profile": profile}
+    ok, reason = cell_is_runnable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        os.makedirs(outdir, exist_ok=True)
+        path = os.path.join(outdir,
+                            f"{arch}__{shape_name}__{mesh_name}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with sp.use_mesh(mesh, sp.profile_rules(mesh, profile)):
+            fn, args, in_sh, out_sh = build_cell(cfg, shape, mesh)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        chips = mesh.size
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "alias_size_in_bytes"):
+                if hasattr(ma, attr):
+                    mem[attr] = int(getattr(ma, attr))
+        except Exception as e:  # pragma: no cover
+            mem["error"] = str(e)
+
+        cost = {}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            cost = {k: float(ca[k]) for k in ("flops", "bytes accessed",
+                                              "transcendentals") if k in ca}
+        except Exception as e:  # pragma: no cover
+            cost["error"] = str(e)
+
+        # Structural HLO cost model: trip-count-aware FLOPs/bytes/collectives
+        # (XLA's cost_analysis counts while bodies once — see hlo_cost.py).
+        hc = hlo_cost.analyze(compiled.as_text())
+
+        rl = Roofline(
+            flops_per_chip=hc.flops,
+            bytes_per_chip=hc.bytes,
+            wire_bytes_per_chip=hc.wire_bytes,
+            chips=chips,
+            model_flops=model_flops_for_cell(cfg, shape),
+        )
+        rec.update(
+            status="ok",
+            chips=chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=mem,
+            xla_cost_analysis=cost,
+            hlo_cost=hc.to_dict(),
+            roofline=rl.to_dict(),
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    finally:
+        rec["wall_s"] = round(time.time() - t0, 2)
+
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, f"{arch}__{shape_name}__{mesh_name}__{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="OpenEye-on-TPU multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=OUTDIR_DEFAULT)
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--profile", default="baseline",
+                    help="sharding profile: baseline | dp_only | "
+                         "serve_resident | ep_data | ep_model | ep_serve")
+    ap.add_argument("--scores-bf16", action="store_true",
+                    help="store attention score blocks in bf16 (perf opt)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out, tag=args.tag,
+                               profile=args.profile,
+                               scores_bf16=args.scores_bf16)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    rl = rec["roofline"]
+                    extra = (f"bound={rl['bottleneck']:10s} "
+                             f"t={rl['t_bound_s']*1e3:9.2f}ms "
+                             f"mfu<={rl['mfu_bound']:6.1%} "
+                             f"compile={rec['compile_s']:.0f}s")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                print(f"[{status:7s}] {arch:18s} {shape:12s} "
+                      f"{rec['mesh']:11s} {extra}", flush=True)
+                results.append(rec)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skipped, {n_err} errors",
+          flush=True)
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: (data=16, model=16) = 256 chips.
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the `pod` axis carries
+only data parallelism (cross-pod links are the scarcest resource — the
+paper's transmission-bottleneck regime).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 2):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

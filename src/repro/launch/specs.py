@@ -1,0 +1,152 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every evaluation cell.
+
+``input_specs(cfg, shape)`` returns abstract inputs for the cell's step
+function (no device allocation — the shannon/kernels pattern).  Modality
+frontends are STUBS per the assignment: audio cells get precomputed frame
+embeddings, VLM cells get patch/text embeddings + M-RoPE position ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import model_api
+from repro.sharding import partition as sp
+
+
+def batch_axes(B: int) -> tuple:
+    """Mesh axes usable for the batch dim of a cell with global batch B."""
+    rules = sp.axis_rules()
+    axes = rules.get("batch")
+    if axes is None:
+        return ()
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    mesh = sp.current_mesh()
+    keep = []
+    size = 1
+    for a in axes:
+        n = mesh.shape[a]
+        if B % (size * n) == 0:
+            keep.append(a)
+            size *= n
+    return tuple(keep)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs = {}
+        if cfg.family == "encdec":
+            specs["frames"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+            specs["tokens"] = _sds((B, S), jnp.int32)
+        elif not cfg.embed_inputs:
+            specs["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+            specs["mrope_positions"] = _sds((3, B, S), jnp.int32)
+        else:
+            specs["tokens"] = _sds((B, S), jnp.int32)
+        if shape.kind == "train":
+            specs["labels"] = _sds((B, S), jnp.int32)
+        return specs
+    # decode: one new token against a seq_len cache
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeSpec, specs: dict):
+    mesh = sp.current_mesh()
+    baxes = batch_axes(shape.global_batch)
+    bspec = baxes if baxes else None
+
+    def spec_for(name, val):
+        if name == "mrope_positions":
+            return P(None, bspec, None)
+        if val.ndim >= 1:
+            return P(*((bspec,) + (None,) * (val.ndim - 1)))
+        return P()
+
+    return {k: NamedSharding(mesh, spec_for(k, v)) for k, v in specs.items()}
+
+
+# ------------------------------------------------------------- cache specs
+
+
+def abstract_cache(cfg: ModelConfig, B: int, max_len: int):
+    api = model_api(cfg)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        enc_len = max_len
+
+        def mk():
+            self_c = encdec.init_self_cache(cfg, B, max_len)
+            def one(_):
+                return {
+                    "k": jnp.zeros((B, enc_len, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+                    "v": jnp.zeros((B, enc_len, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+                    "pos": jnp.full((B, enc_len), -1, jnp.int32),
+                }
+            cross_c = jax.vmap(one)(jnp.arange(cfg.n_layers))
+            return {"self": self_c, "cross": cross_c}
+        return jax.eval_shape(mk)
+    return jax.eval_shape(lambda: api.init_cache(B, max_len))
+
+
+def cache_pspecs(cache_tree, B: int):
+    """PartitionSpecs for a KV/recurrent cache pytree.
+
+    Sequence dims of KV caches are sharded over `model` (plus `data` too when
+    the batch can't use it, e.g. long_500k with B=1) — the distributed
+    partial-softmax ("PSUM bus") layout.
+    """
+    baxes = batch_axes(B)
+    bspec = baxes if baxes else None
+    mesh = sp.current_mesh()
+    free_data = "data" not in (baxes or ())
+    seq_axes = ("data", "model") if free_data else ("model",)
+
+    def leaf_spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            k = getattr(entry, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        rank = leaf.ndim
+        # stacked leading layer/group dims
+        def pad(template):
+            return P(*((None,) * (rank - len(template)) + template))
+
+        rules = sp.axis_rules()
+        model = rules.get("model")
+        if name in ("k", "v"):
+            seq = _divisible_axes(mesh, seq_axes, leaf.shape[-3])
+            return pad((bspec, seq or None, None, None))
+        if name == "pos":
+            seq = _divisible_axes(mesh, seq_axes, leaf.shape[-1])
+            return pad((bspec, seq or None))
+        if name == "h":
+            return pad((bspec, model))
+        if name == "conv":
+            return pad((bspec, None, model))
+        if name == "wkv":
+            return pad((bspec, model, None, None))
+        if name in ("x_tm", "x_cm"):
+            return pad((bspec, None))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def _divisible_axes(mesh, axes, dim: int):
+    keep = []
+    size = 1
+    for a in axes:
+        n = mesh.shape[a]
+        if dim % (size * n) == 0:
+            keep.append(a)
+            size *= n
+    return tuple(keep) if keep else None

@@ -1,0 +1,39 @@
+"""Uniform model API across families.
+
+``model_api(cfg)`` returns a namespace with:
+  init(key)                         -> params
+  forward_train(params, batch)     -> (logits, aux)
+  forward_prefill(params, batch, max_len=None) -> (last_logits, cache)
+  forward_decode(params, tokens, cache, t, **kw) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+from repro.configs.base import ModelConfig
+
+
+def model_api(cfg: ModelConfig) -> SimpleNamespace:
+    if cfg.family == "encdec":
+        from repro.models import encdec as mod
+        return SimpleNamespace(
+            cfg=cfg,
+            init=lambda key: mod.init_params(key, cfg),
+            forward_train=lambda params, batch: mod.forward_train(params, cfg, batch),
+            forward_prefill=lambda params, batch, max_len=None:
+                mod.forward_prefill(params, cfg, batch, max_len=max_len),
+            forward_decode=lambda params, tokens, cache, t, **kw:
+                mod.forward_decode(params, cfg, tokens, cache, t),
+            init_cache=None,
+        )
+    from repro.models import transformer as mod
+    return SimpleNamespace(
+        cfg=cfg,
+        init=lambda key: mod.init_params(key, cfg),
+        forward_train=lambda params, batch: mod.forward_train(params, cfg, batch),
+        forward_prefill=lambda params, batch, max_len=None:
+            mod.forward_prefill(params, cfg, batch, max_len=max_len),
+        forward_decode=lambda params, tokens, cache, t, **kw:
+            mod.forward_decode(params, cfg, tokens, cache, t, **kw),
+        init_cache=lambda batch, max_len: mod.init_cache(cfg, batch, max_len),
+    )

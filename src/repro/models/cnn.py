@@ -1,0 +1,130 @@
+"""The paper's evaluation network (Table 2): 8-bit-quantizable MNIST CNN.
+
+Runs end-to-end on the OpenEye sparse kernels (im2col + block_spmm /
+dual_sparse) — the faithful-reproduction workload for Table 3 / Fig 6.
+~2.13 MOPs per inference (verified in benchmarks/table2_cnn.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.openeye_cnn import CNNConfig
+from repro.core.sparsity import magnitude_block_mask, pack
+from repro.kernels import ops as K
+
+
+def init_cnn(key, cfg: CNNConfig):
+    params = []
+    h, w, c = (*cfg.input_hw, cfg.input_ch)
+    flat = None
+    for layer in cfg.layers:
+        key, k1 = jax.random.split(key)
+        if layer.kind == "conv":
+            wgt = jax.random.normal(
+                k1, (layer.kernel, layer.kernel, c, layer.out_ch), jnp.float32
+            ) / math.sqrt(layer.kernel * layer.kernel * c)
+            params.append({"w": wgt})
+            c = layer.out_ch
+        elif layer.kind == "pool":
+            params.append({})
+            h, w = h // layer.pool, w // layer.pool
+        elif layer.kind == "dense":
+            fan_in = flat if flat is not None else h * w * c
+            wgt = jax.random.normal(k1, (fan_in, layer.out_ch), jnp.float32) \
+                / math.sqrt(fan_in)
+            params.append({"w": wgt})
+            flat = layer.out_ch
+    return params
+
+
+def op_count(cfg: CNNConfig) -> int:
+    """MAC*2 operation count per inference (the paper's ~2.13 MOPs)."""
+    h, w, c = (*cfg.input_hw, cfg.input_ch)
+    total = 0
+    flat = None
+    for layer in cfg.layers:
+        if layer.kind == "conv":
+            total += 2 * h * w * layer.out_ch * layer.kernel * layer.kernel * c
+            c = layer.out_ch
+        elif layer.kind == "pool":
+            h, w = h // layer.pool, w // layer.pool
+        elif layer.kind == "dense":
+            fan_in = flat if flat is not None else h * w * c
+            total += 2 * fan_in * layer.out_ch
+            flat = layer.out_ch
+    return total
+
+
+def pack_cnn(params, cfg: CNNConfig, *, density: float = 1.0, bk=128, bn=32):
+    """Offline prune+pack of all conv/dense weights into BCSC."""
+    packed = []
+    for p, layer in zip(params, cfg.layers):
+        if layer.kind == "conv":
+            w = p["w"]
+            kh, kw, cin, cout = w.shape
+            wm = w.reshape(kh * kw * cin, cout)
+            wm = K._pad_to(K._pad_to(wm, bk, 0), bn, 1)
+            mask = (magnitude_block_mask(wm, bk, bn, density)
+                    if density < 1.0 else jnp.ones(
+                        (wm.shape[0] // bk, wm.shape[1] // bn), bool))
+            packed.append({"sw": pack(wm, mask, bk, bn),
+                           "meta": (kh, kw, cin, cout, 1)})
+        elif layer.kind == "dense":
+            wm = K._pad_to(K._pad_to(p["w"], bk, 0), bn, 1)
+            mask = (magnitude_block_mask(wm, bk, bn, density)
+                    if density < 1.0 else jnp.ones(
+                        (wm.shape[0] // bk, wm.shape[1] // bn), bool))
+            packed.append({"sw": pack(wm, mask, bk, bn), "meta": None})
+        else:
+            packed.append({})
+    return packed
+
+
+def forward_sparse(packed, cfg: CNNConfig, x, *, act_threshold=None,
+                   interpret: bool = True):
+    """x: (B, 28, 28, 1) -> logits (B, 10), via the Pallas sparse kernels."""
+    for p, layer in zip(packed, cfg.layers):
+        if layer.kind == "conv":
+            x = K.sparse_conv2d(x, p["sw"], p["meta"],
+                                act_threshold=act_threshold,
+                                interpret=interpret)
+            x = jax.nn.relu(x)
+        elif layer.kind == "pool":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, layer.pool, layer.pool, 1), (1, layer.pool, layer.pool, 1),
+                "VALID")
+        elif layer.kind == "dense":
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            out_ch = layer.out_ch
+            x = K.sparse_dense(x, p["sw"], act_threshold=act_threshold,
+                               interpret=interpret)[:, :out_ch]
+            if layer is not cfg.layers[-1]:
+                x = jax.nn.relu(x)
+    return x
+
+
+def forward_dense(params, cfg: CNNConfig, x):
+    """Reference dense forward (oracle for the sparse path at density=1)."""
+    for p, layer in zip(params, cfg.layers):
+        if layer.kind == "conv":
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x)
+        elif layer.kind == "pool":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, layer.pool, layer.pool, 1), (1, layer.pool, layer.pool, 1),
+                "VALID")
+        elif layer.kind == "dense":
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            x = x @ p["w"]
+            if layer is not cfg.layers[-1]:
+                x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,366 @@
+"""Core NN layers: norms, rotary embeddings, attention (full / sliding-window /
+decode-with-cache), gated MLP.
+
+Attention is implemented *blockwise* (online softmax over KV blocks) so the
+full score matrix is never materialized — this is the pure-JAX expression of
+OpenEye's "complete layer inside the chip" principle: the working set per
+step is O(S · block) instead of O(S^2).  Sliding-window layers use a *banded*
+variant that only touches KV inside the window (true sub-quadratic compute),
+the analogue of OpenEye's stride-configurable IACT routing which streams only
+the activations a PE column actually needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.partition import shard
+
+# ---------------------------------------------------------------- norms
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rmsnorm(d):
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------- rotary
+
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions: (...,) int32 -> cos/sin (..., dim//2) float32."""
+    half = dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def mrope_cos_sin(mrope_positions, dim: int, theta: float,
+                  sections=(0.25, 0.375, 0.375)):
+    """Qwen2-VL M-RoPE: positions (3, B, S) for (t, h, w); the head-dim
+    frequency bands are split into three sections, each rotated by its own
+    position component."""
+    half = dim // 2
+    n0 = int(round(sections[0] * half))
+    n1 = int(round(sections[1] * half))
+    n2 = half - n0 - n1
+    cs = []
+    for comp, n in zip(range(3), (n0, n1, n2)):
+        if n == 0:
+            continue
+        freq_idx = jnp.arange(sum([n0, n1, n2][:comp]), sum([n0, n1, n2][:comp]) + n)
+        freq = 1.0 / (theta ** (freq_idx.astype(jnp.float32) / half))
+        ang = mrope_positions[comp].astype(jnp.float32)[..., None] * freq
+        cs.append((jnp.cos(ang), jnp.sin(ang)))
+    cos = jnp.concatenate([c for c, _ in cs], axis=-1)
+    sin = jnp.concatenate([s for _, s in cs], axis=-1)
+    return cos, sin   # (B, S, half)
+
+
+# ---------------------------------------------------------------- attention
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, Hkv, G, D)  k: (B, Sk, Hkv, D) -> (B, Hkv, G, Sq, Sk)."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+
+
+def attention_full_blockwise(q, k, v, *, q_offset, causal=True, block_kv=1024,
+                             window=None, scores_dtype=jnp.float32):
+    """Online-softmax attention scanning over KV blocks.
+
+    q: (B, Sq, Hq, D), k/v: (B, Sk, Hkv, D). q position i has absolute
+    position q_offset + i; kv position j is absolute j. Memory per step is
+    O(Sq * block_kv) instead of O(Sq * Sk).
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scale = 1.0 / math.sqrt(D)
+
+    nb = max(Sk // block_kv, 1)
+    block_kv = Sk // nb
+    kb = k.reshape(B, nb, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, j0 = blk
+        # scores materialize in HBM between the two dots of blockwise
+        # attention; bf16 storage halves that traffic (MXU accumulates fp32
+        # internally) — opt-in via cfg.attn_scores_bf16, see §Perf.
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kblk,
+                       preferred_element_type=scores_dtype
+                       ).astype(jnp.float32) * scale
+        if causal or window is not None:
+            kpos = j0 + jnp.arange(block_kv)
+            mask = jnp.ones((Sq, block_kv), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    offsets = jnp.arange(nb) * block_kv
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, offsets))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention_banded(q, k, v, *, window, q_offset=0, block_q=512):
+    """Sliding-window causal attention touching only the KV band.
+
+    Compute & memory are O(Sq * (window + block_q)) — sub-quadratic for
+    window << Sk. Band per q block i: kv positions
+    [i*bq - window + 1, i*bq + bq).
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    block_q = min(block_q, Sq)
+    nqb = Sq // block_q
+    band = window + block_q   # static band length
+
+    if band >= Sk:
+        return attention_full_blockwise(q, k, v, q_offset=q_offset, causal=True,
+                                        window=window)
+
+    qg = q.reshape(B, nqb, block_q, Hkv, G, D)
+
+    def one_block(i, qblk):
+        # kv band start (clamped): absolute positions of this q block are
+        # [q_offset + i*bq, q_offset + i*bq + bq)
+        q0 = q_offset + i * block_q
+        start = jnp.clip(q0 + block_q - band, 0, Sk - band)
+        kband = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vband = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kband,
+                       preferred_element_type=jnp.float32) * scale
+        qpos = q0 + jnp.arange(block_q)
+        kpos = start + jnp.arange(band)
+        mask = (qpos[:, None] >= kpos[None, :]) & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vband.dtype), vband,
+                       preferred_element_type=jnp.float32)
+        return o.transpose(0, 3, 1, 2, 4).reshape(B, block_q, Hq, D)
+
+    outs = jax.lax.map(lambda args: one_block(*args),
+                       (jnp.arange(nqb), qg.transpose(1, 0, 2, 3, 4, 5)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention_decode(q, k_cache, v_cache, cache_positions, t, *, window=None):
+    """Single-token attention against a (possibly ring-buffer) KV cache.
+
+    q: (B, 1, Hq, D); k/v_cache: (B, L, Hkv, D); cache_positions: (B, L)
+    absolute position per slot (-1 = empty); t: scalar or (B,) per-slot
+    positions (continuous batching).  Partial-softmax reduction over a
+    seq-sharded cache is the cross-chip analogue of OpenEye's vertical PSUM
+    accumulation (GSPMD inserts the reduction collectives when L is sharded
+    over `model`).
+    """
+    B, _, Hq, D = q.shape
+    L, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    tb = jnp.broadcast_to(jnp.asarray(t), (B,))[:, None]
+    valid = (cache_positions >= 0) & (cache_positions <= tb)
+    if window is not None:
+        valid &= cache_positions > (tb - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- attention block
+
+
+def init_attention(key, cfg: ModelConfig, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(cfg.q_dim)
+    p = {
+        "wq": jax.random.normal(k1, (d, cfg.q_dim), jnp.float32) * s,
+        "wk": jax.random.normal(k2, (d, cfg.kv_dim), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (d, cfg.kv_dim), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (cfg.q_dim, d), jnp.float32) * so,
+    }
+    if cfg.use_qk_norm:
+        p["qnorm"] = init_rmsnorm(cfg.hd)
+        p["knorm"] = init_rmsnorm(cfg.hd)
+    return p
+
+
+def attention_block(p, cfg: ModelConfig, x, *, code: str, positions,
+                    mode: str, cache=None, t=None, cos_sin=None,
+                    kv_source=None, causal=True):
+    """Shared attention block.  kv_source!=None => cross-attention (whisper).
+
+    Returns (out, new_cache).  cache layout:
+      self-attn  : {"k": (B,L,Hkv,D), "v": ..., "pos": (B,L)}
+      cross-attn : precomputed, never updated at decode.
+    """
+    dtype = x.dtype
+    B, S, _ = x.shape
+    window = cfg.sliding_window if code in ("L", "SM") else None
+
+    q = (x @ p["wq"].astype(dtype)).reshape(B, S, cfg.n_heads, cfg.hd)
+    src = x if kv_source is None else kv_source
+    Skv = src.shape[1]
+    k = (src @ p["wk"].astype(dtype)).reshape(B, Skv, cfg.n_kv_heads, cfg.hd)
+    v = (src @ p["wv"].astype(dtype)).reshape(B, Skv, cfg.n_kv_heads, cfg.hd)
+
+    if cfg.use_qk_norm:
+        q = rmsnorm(q, p["qnorm"])
+        k = rmsnorm(k, p["knorm"])
+
+    if cos_sin is not None:                      # rope (None for whisper/cross)
+        cos, sin = cos_sin
+        q = apply_rope(q, cos, sin)
+        if kv_source is None:
+            k = apply_rope(k, cos, sin)
+
+    new_cache = cache
+    sdt = jnp.bfloat16 if cfg.attn_scores_bf16 else jnp.float32
+    if mode in ("train", "encode"):
+        if kv_source is not None or not causal:
+            out = attention_full_blockwise(q, k, v, q_offset=0, causal=False,
+                                           scores_dtype=sdt)
+        elif window is not None:
+            out = attention_banded(q, k, v, window=window)
+        else:
+            out = attention_full_blockwise(q, k, v, q_offset=0, causal=True,
+                                           scores_dtype=sdt)
+    elif mode == "prefill":
+        if kv_source is not None:
+            out = attention_full_blockwise(q, k, v, q_offset=0, causal=False)
+            new_cache = {"k": k, "v": v,
+                         "pos": jnp.broadcast_to(jnp.arange(Skv), (B, Skv))}
+        else:
+            out = (attention_banded(q, k, v, window=window) if window is not None
+                   else attention_full_blockwise(q, k, v, q_offset=0, causal=True))
+            Lc = cache["k"].shape[1]                 # cache capacity (>= S or ring)
+            if window is not None and window < S:
+                # ring cache holding the last `window` positions; slot for
+                # position p must be p % window so decode's t % L overwrites
+                # the oldest entry.
+                kc, vc = k[:, S - window:], v[:, S - window:]
+                pos = jnp.broadcast_to(jnp.arange(S - window, S), (B, window))
+                shift = S % window
+                kc = jnp.roll(kc, shift, axis=1)
+                vc = jnp.roll(vc, shift, axis=1)
+                pos = jnp.roll(pos, shift, axis=1)
+                if Lc > window:                      # pad into larger ring (rare)
+                    kc = jnp.concatenate(
+                        [kc, jnp.zeros((B, Lc - window) + kc.shape[2:], kc.dtype)], 1)
+                    vc = jnp.concatenate(
+                        [vc, jnp.zeros((B, Lc - window) + vc.shape[2:], vc.dtype)], 1)
+                    pos = jnp.concatenate(
+                        [pos, jnp.full((B, Lc - window), -1, pos.dtype)], 1)
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    jnp.zeros((B, Lc) + k.shape[2:], k.dtype), k, 0, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    jnp.zeros((B, Lc) + v.shape[2:], v.dtype), v, 0, axis=1)
+                pos = jnp.concatenate(
+                    [jnp.broadcast_to(jnp.arange(S), (B, S)),
+                     jnp.full((B, Lc - S), -1, jnp.int32)], 1)
+            new_cache = {"k": kc, "v": vc, "pos": pos}
+    elif mode == "decode":
+        if kv_source is None:
+            L = cache["k"].shape[1]
+            tb = jnp.broadcast_to(jnp.asarray(t), (B,))
+            slot = tb % L if window is not None else jnp.minimum(tb, L - 1)
+            bidx = jnp.arange(B)
+            kc = cache["k"].at[bidx, slot].set(k[:, 0])
+            vc = cache["v"].at[bidx, slot].set(v[:, 0])
+            pos = cache["pos"].at[bidx, slot].set(tb.astype(cache["pos"].dtype))
+            new_cache = {"k": kc, "v": vc, "pos": pos}
+            out = attention_decode(q, kc, vc, pos, t, window=window)
+        else:
+            out = attention_decode(q, cache["k"], cache["v"], cache["pos"],
+                                   jnp.asarray(2**30), window=None)
+    else:
+        raise ValueError(mode)
+
+    out = out.reshape(B, S, cfg.q_dim)
+    return out @ p["wo"].astype(dtype), new_cache
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def init_mlp(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": jax.random.normal(k1, (d, ff), jnp.float32) / math.sqrt(d),
+        "w_up": jax.random.normal(k2, (d, ff), jnp.float32) / math.sqrt(d),
+        "w_down": jax.random.normal(k3, (ff, d), jnp.float32) / math.sqrt(ff),
+    }
+
+
+def mlp_block(p, cfg: ModelConfig, x, sparse_apply=None):
+    """Gated-SiLU MLP. When the arch enables OpenEye sparsity, the three
+    projections run through the block-sparse path (sparse_apply)."""
+    dt = x.dtype
+    if sparse_apply is not None:
+        g = sparse_apply(x, "w_gate")
+        u = sparse_apply(x, "w_up")
+        h = jax.nn.silu(g) * u
+        h = shard(h, "batch", None, "model_ff")
+        return sparse_apply(h, "w_down")
+    g = x @ p["w_gate"].astype(dt)
+    u = x @ p["w_up"].astype(dt)
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", None, "model_ff")
+    return h @ p["w_down"].astype(dt)

@@ -1,0 +1,296 @@
+"""Recurrent token mixers: RG-LRU (Griffin / recurrentgemma) and RWKV-6.
+
+Both are adapted for the TPU mesh:
+  * RG-LRU is a per-channel diagonal linear recurrence -> evaluated with
+    `jax.lax.associative_scan` (log-depth, fully parallel) on channels that
+    are TP-sharded over `model`; the scan is elementwise, so it stays local
+    per chip — no cross-chip traffic inside the recurrence.
+  * RWKV-6 uses a *chunked* WKV evaluation: the inter-chunk recurrence is a
+    short `lax.scan`, the intra-chunk part is dense matmuls (MXU-friendly).
+    Heads are TP-sharded over `model` (head_size 64 => heads % 16 == 0).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_rmsnorm
+from repro.sharding.partition import shard
+
+# ================================================================= RG-LRU
+
+RG_LRU_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dr = cfg.rnn_width or d
+    H = cfg.n_heads
+    hb = dr // H
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    sb = 1.0 / math.sqrt(hb)
+    return {
+        "rg_in": jax.random.normal(ks[0], (d, dr), jnp.float32) * s,        # x branch
+        "rg_gate_in": jax.random.normal(ks[1], (d, dr), jnp.float32) * s,   # gelu gate branch
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_width, dr), jnp.float32) * 0.1,
+        "rg_wa": jax.random.normal(ks[3], (H, hb, hb), jnp.float32) * sb,   # recurrence gate
+        "rg_wx": jax.random.normal(ks[4], (H, hb, hb), jnp.float32) * sb,   # input gate
+        # Lambda init so that a = exp(-c*softplus(L)*r) starts near 0.9..0.999
+        "rg_lambda": jnp.log(jnp.expm1(
+            -jnp.log(jax.random.uniform(ks[5], (dr,), jnp.float32,
+                                        minval=0.9, maxval=0.999)) / RG_LRU_C)),
+        "rg_out": jax.random.normal(jax.random.fold_in(key, 7), (dr, d),
+                                    jnp.float32) / math.sqrt(dr),
+    }
+
+
+def _blockdiag(x, w):
+    """x: (B, S, dr) -> per-head block-diagonal matmul with w: (H, hb, hb)."""
+    B, S, dr = x.shape
+    H = w.shape[0]
+    xh = x.reshape(B, S, H, dr // H)
+    return jnp.einsum("bshi,hij->bshj", xh, w.astype(x.dtype)).reshape(B, S, dr)
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv along seq.  x: (B, S, dr), w: (cw, dr).
+    state: (B, cw-1, dr) trailing context for decode; returns (y, new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else pad
+    return y, new_state
+
+
+def rglru_mix(p, cfg: ModelConfig, x, *, mode: str, state=None):
+    """Griffin recurrent block.  x: (B, S, d).
+    state (decode): {"h": (B, dr) f32, "conv": (B, cw-1, dr)}.
+    Returns (out, new_state)."""
+    dt = x.dtype
+    B, S, _ = x.shape
+    gate = jax.nn.gelu(x @ p["rg_gate_in"].astype(dt))
+    xb = x @ p["rg_in"].astype(dt)
+    xb = shard(xb, "batch", None, "model_ff")
+    gate = shard(gate, "batch", None, "model_ff")
+
+    conv_state = None if state is None else state["conv"]
+    xb, new_conv = _causal_conv(xb, p["conv_w"], conv_state)
+
+    # gates (block-diagonal per head)
+    r = jax.nn.sigmoid(_blockdiag(xb, p["rg_wa"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_blockdiag(xb, p["rg_wx"]).astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["rg_lambda"]).astype(jnp.float32) * r
+    a = jnp.exp(log_a)                                   # (B,S,dr) f32
+    gated_x = i * xb.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+
+    if mode == "decode":
+        h0 = state["h"]
+        h = a[:, 0] * h0 + b[:, 0]
+        hs = h[:, None, :]
+        new_h = h
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        a_s, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_h = hs[:, -1]
+
+    out = (jax.nn.gelu(gate.astype(jnp.float32)) * hs).astype(dt)
+    out = out @ p["rg_out"].astype(dt)
+    new_state = {"h": new_h, "conv": new_conv}
+    return out, new_state
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int):
+    dr = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), jnp.bfloat16),
+    }
+
+
+# ================================================================= RWKV-6
+
+W_LORA_DIM = 64
+
+
+def init_rwkv6(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(d)
+    ff = cfg.d_ff
+    return {
+        # time-mix
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),   # r,k,v,g,w shift mix
+        "wr": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "wkk": jax.random.normal(ks[2], (d, d), jnp.float32) * s,
+        "wvv": jax.random.normal(ks[3], (d, d), jnp.float32) * s,
+        "wg": jax.random.normal(ks[4], (d, d), jnp.float32) * s,
+        "w_out": jax.random.normal(ks[5], (d, d), jnp.float32) * s,
+        "w_lora_a": jax.random.normal(ks[6], (d, W_LORA_DIM), jnp.float32) * s,
+        "w_lora_b": jax.random.normal(ks[7], (W_LORA_DIM, d), jnp.float32) * 0.01,
+        "w_base": jnp.full((d,), -2.0, jnp.float32),            # base decay ~exp(-exp(-2))
+        "u_bonus": jax.random.normal(ks[8], (cfg.n_heads, cfg.hd), jnp.float32) * 0.1,
+        # channel-mix
+        "mu_cm": jax.random.uniform(ks[9], (2, d), jnp.float32),
+        "cm_k": jax.random.normal(ks[10], (d, ff), jnp.float32) * s,
+        "cm_v": jax.random.normal(ks[11], (ff, d), jnp.float32) / math.sqrt(ff),
+        "cm_r": jax.random.normal(jax.random.fold_in(key, 13), (d, d), jnp.float32) * s,
+    }
+
+
+def _token_shift(x, last=None):
+    """x_{t-1} (zero/state-padded).  x: (B,S,d); last: (B,d) decode state."""
+    if x.shape[1] == 1 and last is not None:
+        return last[:, None, :].astype(x.dtype)
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def wkv6_sequential(r, k, v, w, u, s0=None):
+    """Exact reference recurrence (used by tests and decode).
+
+    r,k,v: (B,S,H,hd); w: (B,S,H,hd) decay in (0,1); u: (H,hd) bonus.
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  y_t = S_{t-1}^T r_t + (r.(u*k)) v_t
+    Returns y (B,S,H,hd) f32 and final state (B,H,hd,hd) f32.
+    """
+    B, S, H, hd = r.shape
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32) if s0 is None else s0
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp       # (B,H,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state) \
+            + jnp.einsum("bhk,bhk,bhv->bhv", rt, u[None] * kt, vt)
+        state = state * wt[..., None] + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return state, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def wkv6_chunked(r, k, v, w, u, s0=None, chunk: int = 32):
+    """Chunked WKV-6: inter-chunk scan + intra-chunk matmuls (MXU-friendly).
+
+    Numerics: decays are factored as exp(cum - o/2)*exp(o/2 - cum) with o the
+    per-chunk total log-decay, bounding every exponent by |o|/2 (fp32-safe
+    for chunk=32 with realistic decays).
+    """
+    B, S, H, hd = r.shape
+    if S % chunk != 0:
+        return wkv6_sequential(r, k, v, w, u, s0)
+    C = chunk
+    N = S // C
+    f32 = jnp.float32
+    rc, kc, vc = (t.reshape(B, N, C, H, hd).astype(f32) for t in (r, k, v))
+    lw = jnp.log(jnp.clip(w.reshape(B, N, C, H, hd).astype(f32), 1e-8, 1.0))
+    cum = jnp.cumsum(lw, axis=2)                       # inclusive per-chunk
+    total = cum[:, :, -1:]                             # (B,N,1,H,hd)
+    half = 0.5 * total
+
+    # decay-weighted q/k within chunk (bounded exponents)
+    r_t = rc * jnp.exp(cum - lw - half)                # exp(cum_{t-1} - o/2)
+    k_s = kc * jnp.exp(half - cum)                     # exp(o/2 - cum_s)
+    # intra-chunk strictly-lower-triangular attention
+    scores = jnp.einsum("bnthd,bnshd->bnhts", r_t, k_s)
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bnhts,bnshd->bnthd", scores, vc)
+    # diagonal bonus term
+    diag = jnp.einsum("bnthd,bnthd->bnth", rc, u[None, None, None] * kc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    # inter-chunk: carry state across chunks
+    r_in = rc * jnp.exp(cum - lw)                      # exp(cum_{t-1}), <=1
+    k_out = kc * jnp.exp(total - cum)                  # contribution to chunk-end state
+    kv_chunk = jnp.einsum("bnshd,bnshv->bnhdv", k_out, vc)  # sum_s decayed k v^T
+    decay_chunk = jnp.exp(total[:, :, 0])              # (B,N,H,hd)
+
+    s0 = jnp.zeros((B, H, hd, hd), f32) if s0 is None else s0
+
+    def step(state, inp):
+        kv_n, dec_n = inp                              # (B,H,hd,hd), (B,H,hd)
+        out_state = state
+        state = state * dec_n[..., None] + kv_n
+        return state, out_state
+
+    xs = (kv_chunk.transpose(1, 0, 2, 3, 4), decay_chunk.transpose(1, 0, 2, 3))
+    s_final, s_prevs = jax.lax.scan(step, s0, xs)
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)         # (B,N,H,hd,hd) state at chunk start
+    y_inter = jnp.einsum("bnthd,bnhdv->bnthv", r_in, s_prevs)
+    y = (y_intra + y_inter).reshape(B, S, H, hd)
+    return y, s_final
+
+
+def rwkv6_time_mix(p, cfg: ModelConfig, x, *, mode: str, state=None, chunk: int = 32):
+    """RWKV-6 attention-free token mixer.  x: (B,S,d).
+    state (decode): {"wkv": (B,H,hd,hd) f32, "x_tm": (B,d)}."""
+    dt = x.dtype
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    last = None if state is None else state.get("x_tm")
+    xs = _token_shift(x, last)
+    mu = p["mu"].astype(dt)
+    xr = x + (xs - x) * mu[0]
+    xk = x + (xs - x) * mu[1]
+    xv = x + (xs - x) * mu[2]
+    xg = x + (xs - x) * mu[3]
+    xw = x + (xs - x) * mu[4]
+
+    r = (xr @ p["wr"].astype(dt)).reshape(B, S, H, hd)
+    k = (xk @ p["wkk"].astype(dt)).reshape(B, S, H, hd)
+    v = (xv @ p["wvv"].astype(dt)).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    r = shard(r, "batch", None, "model_heads", None)
+    k = shard(k, "batch", None, "model_heads", None)
+    v = shard(v, "batch", None, "model_heads", None)
+
+    # data-dependent per-channel decay w_t = exp(-exp(base + lora(x)))
+    w_log = p["w_base"].astype(jnp.float32) + \
+        ((xw @ p["w_lora_a"].astype(dt)) @ p["w_lora_b"].astype(dt)).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, S, H, hd)
+
+    s0 = None if state is None else state.get("wkv")
+    if mode == "decode":
+        y, s_new = wkv6_sequential(r, k, v, w, p["u_bonus"], s0)
+    else:
+        y, s_new = wkv6_chunked(r, k, v, w, p["u_bonus"], s0, chunk=chunk)
+
+    y = (y.reshape(B, S, d).astype(dt) * g)
+    out = y @ p["w_out"].astype(dt)
+    new_state = {"wkv": s_new, "x_tm": x[:, -1].astype(jnp.bfloat16)}
+    return out, new_state
+
+
+def rwkv6_channel_mix(p, cfg: ModelConfig, x, *, state=None):
+    """RWKV channel-mix FFN with token shift. state: {"x_cm": (B,d)}."""
+    dt = x.dtype
+    last = None if state is None else state.get("x_cm")
+    xs = _token_shift(x, last)
+    mu = p["mu_cm"].astype(dt)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_k"].astype(dt)))
+    kk = shard(kk, "batch", None, "model_ff")
+    vv = kk @ p["cm_v"].astype(dt)
+    rr = jax.nn.sigmoid(xr @ p["cm_r"].astype(dt))
+    return rr * vv, {"x_cm": x[:, -1].astype(jnp.bfloat16)}
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int):
+    return {
+        "wkv": jnp.zeros((batch, cfg.n_heads, cfg.hd, cfg.hd), jnp.float32),
+        "x_tm": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+        "x_cm": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+    }

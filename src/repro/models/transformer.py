@@ -1,0 +1,280 @@
+"""Decoder-LM assembly for all pattern-based families (dense / MoE / hybrid /
+SSM / VLM).  Layers are *scanned* over repeated pattern groups with stacked
+parameters — one group's HLO + a loop, which keeps compile time and HLO size
+O(pattern) instead of O(n_layers) (essential for 88-layer granite at 512
+devices) and is the direct analogue of OpenEye instantiating CLUSTER_ROWS
+identical clusters.
+
+Modes:
+  train   : full-sequence logits (+ MoE aux loss)
+  prefill : logits for the last position + KV/recurrent caches
+  decode  : single-token step against caches (position `t`)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN_CODES, ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.sharding.partition import shard
+
+# ----------------------------------------------------------------- init
+
+
+def init_block(key, cfg: ModelConfig, code: str):
+    k1, k2 = jax.random.split(key)
+    p: dict[str, Any] = {"norm1": L.init_rmsnorm(cfg.d_model)}
+    if code in ATTN_CODES:
+        p["attn"] = L.init_attention(k1, cfg)
+        p["norm2"] = L.init_rmsnorm(cfg.d_model)
+        if code in ("GM", "SM"):
+            p["moe"] = M.init_moe(k2, cfg)
+        else:
+            p["mlp"] = L.init_mlp(k2, cfg)
+    elif code == "R":
+        p["rglru"] = R.init_rglru(k1, cfg)
+        p["norm2"] = L.init_rmsnorm(cfg.d_model)
+        p["mlp"] = L.init_mlp(k2, cfg)
+    elif code == "W":
+        p["rwkv"] = R.init_rwkv6(k1, cfg)
+        p["norm2"] = L.init_rmsnorm(cfg.d_model)
+    else:
+        raise ValueError(code)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    ke, kl, kh, kt = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "emb": (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                / math.sqrt(cfg.d_model)).astype(jnp.float32),
+        "norm_f": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            kh, (cfg.d_model, cfg.vocab_size), jnp.float32) / math.sqrt(cfg.d_model)
+
+    def group_init(k):
+        ks = jax.random.split(k, len(cfg.pattern))
+        return {f"b{i}": init_block(ks[i], cfg, code)
+                for i, code in enumerate(cfg.pattern)}
+
+    if cfg.n_groups > 0:
+        params["groups"] = jax.vmap(group_init)(jax.random.split(kl, cfg.n_groups))
+    if cfg.tail_pattern:
+        ks = jax.random.split(kt, len(cfg.tail_pattern))
+        params["tail"] = {f"b{i}": init_block(ks[i], cfg, code)
+                          for i, code in enumerate(cfg.tail_pattern)}
+    return params
+
+
+# ----------------------------------------------------------------- caches
+
+
+def init_block_cache(cfg: ModelConfig, code: str, batch: int, max_len: int):
+    if code in ATTN_CODES:
+        window = cfg.sliding_window if code in ("L", "SM") else None
+        length = min(window, max_len) if window else max_len
+        return {
+            "k": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+            "v": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+            "pos": jnp.full((batch, length), -1, jnp.int32),
+        }
+    if code == "R":
+        return R.rglru_init_state(cfg, batch)
+    if code == "W":
+        return R.rwkv6_init_state(cfg, batch)
+    raise ValueError(code)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    cache: dict[str, Any] = {}
+    if cfg.n_groups > 0:
+        def one_group(_):
+            return {f"b{i}": init_block_cache(cfg, code, batch, max_len)
+                    for i, code in enumerate(cfg.pattern)}
+        cache["groups"] = jax.vmap(one_group)(jnp.arange(cfg.n_groups))
+    if cfg.tail_pattern:
+        cache["tail"] = {f"b{i}": init_block_cache(cfg, code, batch, max_len)
+                         for i, code in enumerate(cfg.tail_pattern)}
+    return cache
+
+
+# ----------------------------------------------------------------- blocks
+
+
+def apply_block(p, cfg: ModelConfig, code: str, x, *, mode, cache=None, t=None,
+                cos_sin=None):
+    """Pre-norm residual block. Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+    h = L.rmsnorm(x, p["norm1"])
+    if code in ATTN_CODES:
+        out, new_cache = L.attention_block(
+            p["attn"], cfg, h, code=code, positions=None, mode=mode,
+            cache=cache, t=t, cos_sin=cos_sin)
+        x = x + out
+        h2 = L.rmsnorm(x, p["norm2"])
+        if code in ("GM", "SM"):
+            out2, aux = M.moe_block(p["moe"], cfg, h2)
+        else:
+            out2 = L.mlp_block(p["mlp"], cfg, h2)
+        x = x + out2
+    elif code == "R":
+        st = cache
+        out, new_cache = R.rglru_mix(p["rglru"], cfg, h, mode=mode, state=st)
+        x = x + out
+        x = x + L.mlp_block(p["mlp"], cfg, L.rmsnorm(x, p["norm2"]))
+    elif code == "W":
+        st = cache if cache is not None else None
+        out, tm_state = R.rwkv6_time_mix(p["rwkv"], cfg, h, mode=mode, state=st)
+        x = x + out
+        out2, cm_state = R.rwkv6_channel_mix(
+            p["rwkv"], cfg, L.rmsnorm(x, p["norm2"]), state=st)
+        x = x + out2
+        new_cache = {**tm_state, **cm_state}
+    if mode == "decode":
+        x = shard(x, "batch", None, None)
+    else:
+        x = shard(x, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+def _apply_pattern(block_params, block_caches, cfg, pattern, x, *, mode, t, cos_sin):
+    new_caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, code in enumerate(pattern):
+        key = f"b{i}"
+        c = None if block_caches is None else block_caches[key]
+        x, nc, aux = apply_block(block_params[key], cfg, code, x,
+                                 mode=mode, cache=c, t=t, cos_sin=cos_sin)
+        new_caches[key] = nc
+        aux_total = aux_total + aux
+    return x, new_caches, aux_total
+
+
+def apply_stack(params, cfg: ModelConfig, x, *, mode, cache=None, t=None,
+                cos_sin=None):
+    """Scan over stacked groups, then the unrolled tail."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict[str, Any] = {}
+
+    if cfg.n_groups > 0:
+        def body(carry, xs):
+            xc, aux = carry
+            gp, gc = xs
+            xc, ncache, a = _apply_pattern(gp, gc, cfg, cfg.pattern, xc,
+                                           mode=mode, t=t, cos_sin=cos_sin)
+            return (xc, aux + a), ncache
+
+        if mode == "train" and cfg.remat_policy != "none":
+            policy = (jax.checkpoint_policies.nothing_saveable
+                      if cfg.remat_policy == "nothing_saveable"
+                      else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+        group_caches = cache["groups"] if cache is not None else None
+        if group_caches is None:
+            xs = (params["groups"], None)
+            # lax.scan needs a pytree with consistent leading dims; pass params only
+            (x, aux_total), _ = jax.lax.scan(
+                lambda c, gp: (body(c, (gp, None))[0], None),
+                (x, aux_total), params["groups"])
+        else:
+            (x, aux_total), new_group_caches = jax.lax.scan(
+                body, (x, aux_total), (params["groups"], group_caches))
+            new_cache["groups"] = new_group_caches
+
+    if cfg.tail_pattern:
+        tail_caches = cache.get("tail") if cache is not None else None
+        x, ntail, a = _apply_pattern(params["tail"], tail_caches, cfg,
+                                     cfg.tail_pattern, x, mode=mode, t=t,
+                                     cos_sin=cos_sin)
+        aux_total = aux_total + a
+        if cache is not None:
+            new_cache["tail"] = ntail
+    return x, (new_cache if cache is not None else None), aux_total
+
+
+# ----------------------------------------------------------------- model
+
+
+def _cos_sin(cfg: ModelConfig, positions=None, mrope_positions=None):
+    if cfg.mrope and mrope_positions is not None:
+        return L.mrope_cos_sin(mrope_positions, cfg.hd, cfg.rope_theta)
+    return L.rope_angles(positions, cfg.hd, cfg.rope_theta)
+
+
+def embed(params, cfg: ModelConfig, tokens):
+    x = params["emb"].astype(jnp.bfloat16)[tokens]
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), jnp.bfloat16)
+    return x
+
+
+def unembed(params, cfg: ModelConfig, x):
+    x = L.rmsnorm(x, params["norm_f"])
+    head = (params["emb"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    return shard(logits, "batch", None, "model_vocab")
+
+
+def forward_train(params, cfg: ModelConfig, batch):
+    """batch: {"tokens": (B,S) int32} or {"embeds": (B,S,d) bf16} (+ optional
+    "mrope_positions": (3,B,S)). Returns (logits, aux)."""
+    if cfg.embed_inputs:
+        x = embed(params, cfg, batch["tokens"])
+        S = batch["tokens"].shape[1]
+    else:
+        x = batch["embeds"].astype(jnp.bfloat16)
+        S = x.shape[1]
+    x = shard(x, "batch", "seq", None)
+    cos_sin = _cos_sin(cfg, positions=jnp.arange(S),
+                       mrope_positions=batch.get("mrope_positions"))
+    x, _, aux = apply_stack(params, cfg, x, mode="train", cos_sin=cos_sin)
+    return unembed(params, cfg, x), aux
+
+
+def forward_prefill(params, cfg: ModelConfig, batch, max_len=None):
+    """Returns (last-token logits, cache). max_len sizes the KV cache
+    (>= S; leaves headroom for subsequent decode steps)."""
+    if cfg.embed_inputs:
+        x = embed(params, cfg, batch["tokens"])
+        S = batch["tokens"].shape[1]
+    else:
+        x = batch["embeds"].astype(jnp.bfloat16)
+        S = x.shape[1]
+    x = shard(x, "batch", "seq", None)
+    cos_sin = _cos_sin(cfg, positions=jnp.arange(S),
+                       mrope_positions=batch.get("mrope_positions"))
+    B = x.shape[0]
+    cache = init_cache(cfg, B, max_len or S)
+    x, cache, _ = apply_stack(params, cfg, x, mode="prefill", cache=cache,
+                              cos_sin=cos_sin)
+    return unembed(params, cfg, x[:, -1:]), cache
+
+
+def forward_decode(params, cfg: ModelConfig, tokens, cache, t,
+                   mrope_positions=None):
+    """tokens: (B,1) int32; t: scalar int32 current absolute position.
+    Returns (logits (B,1,V), new_cache)."""
+    x = embed(params, cfg, tokens)
+    B = x.shape[0]
+    tb = jnp.broadcast_to(jnp.asarray(t), (B,)).astype(jnp.int32)
+    if cfg.mrope:
+        mp = (mrope_positions if mrope_positions is not None
+              else jnp.broadcast_to(tb[None, :, None], (3, B, 1)))
+        cos_sin = L.mrope_cos_sin(mp, cfg.hd, cfg.rope_theta)
+    else:
+        cos_sin = L.rope_angles(tb[:, None], cfg.hd, cfg.rope_theta)
+    x = shard(x, "batch", None, None)
+    x, cache, _ = apply_stack(params, cfg, x, mode="decode", cache=cache, t=t,
+                              cos_sin=cos_sin)
+    return unembed(params, cfg, x), cache

@@ -1,0 +1,151 @@
+"""Slot-based serving engine (continuous-batching-lite).
+
+A fixed pool of B slots shares one decode step per tick (static shapes —
+the TPU serving idiom).  Each slot carries its own position: the decode
+step takes a per-slot position vector ``t`` and scatter-writes each slot's
+KV at its own offset, so requests at different progress coexist in one
+batch (continuous batching).  Finished slots are evicted and refilled.
+
+The decode KV cache is sharded per launch/specs.py (seq over `model`) —
+the distributed partial-softmax ("PSUM bus") path.  This engine is the
+substrate behind the decode_32k / long_500k cells and examples/serve_lm.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import functools
+
+from repro.configs.base import ModelConfig
+from repro.models import model_api
+
+
+@functools.lru_cache(maxsize=32)
+def _decode_fn(cfg: ModelConfig):
+    """One compiled decode step per config, shared by all engines.
+
+    Separate jit instances of the same computation may compile to
+    executables with different bf16 instruction orderings (observed:
+    PYTHONHASHSEED-dependent last-bit divergence) — sharing the executable
+    makes engines bit-deterministic w.r.t. each other and avoids
+    per-engine recompiles."""
+    api = model_api(cfg)
+    return jax.jit(lambda p, toks, cache, t:
+                   api.forward_decode(p, toks, cache, t))
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (P,) int32
+    max_new_tokens: int
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256):
+        assert cfg.family != "encdec", "use a dedicated enc-dec engine"
+        self.cfg = cfg
+        self.api = model_api(cfg)
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = self.api.init_cache(slots, max_len)
+        self.t = np.zeros(slots, np.int32)            # next write position
+        self.active: list[Optional[Request]] = [None] * slots
+        self.last_token = np.zeros(slots, np.int32)
+        self._decode = _decode_fn(cfg)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.active)
+
+    # dims trailing the batch dim, per cache leaf kind
+    _TRAIL = {"pos": 1, "h": 1, "x_tm": 1, "x_cm": 1, "conv": 2, "wkv": 3}
+
+    def _reset_slot(self, slot: int):
+        """Invalidate a reused slot's cache row: stale KV entries from the
+        previous occupant would become unmasked once the new request's
+        position passes theirs (caught by the slot-isolation test).
+        k/v rows may stay — they are masked by pos = -1."""
+        def reset(path, leaf):
+            name = None
+            for entry in reversed(path):
+                k = getattr(entry, "key", None)
+                if isinstance(k, str):
+                    name = k
+                    break
+            trail = self._TRAIL.get(name)
+            if trail is None:
+                return leaf
+            idx = (Ellipsis, slot) + (slice(None),) * trail
+            return leaf.at[idx].set(-1 if name == "pos" else 0)
+        self.cache = jax.tree_util.tree_map_with_path(reset, self.cache)
+
+    def submit(self, req: Request) -> bool:
+        """Feed the prompt through shared decode ticks into a free slot.
+
+        Inactive slots re-write their last token at their unchanged position
+        (idempotent) — no cross-slot corruption.  Returns False when full.
+        """
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        self._reset_slot(slot)
+        self.active[slot] = req
+        self.t[slot] = 0
+        for tok in req.prompt[:-1]:
+            self.last_token[slot] = int(tok)
+            self._tick(sample=False)
+            self.t[slot] += 1
+        self.last_token[slot] = int(req.prompt[-1])
+        return True
+
+    def _tick(self, sample: bool = True):
+        toks = jnp.asarray(self.last_token.reshape(-1, 1))
+        logits, self.cache = self._decode(self.params, toks, self.cache,
+                                          jnp.asarray(self.t))
+        return logits if sample else None
+
+    def step(self) -> list[Request]:
+        """Advance every active slot one token; returns finished requests."""
+        if self.n_active == 0:
+            return []
+        logits = self._tick(sample=True)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        finished = []
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            r.out_tokens.append(int(nxt[i]))
+            self.last_token[i] = int(nxt[i])
+            self.t[i] += 1
+            if (len(r.out_tokens) >= r.max_new_tokens
+                    or self.t[i] >= self.max_len - 1):
+                r.done = True
+                finished.append(r)
+                self.active[i] = None
+        return finished
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Serve a workload to completion (refilling slots as they free)."""
+        pending = list(requests)
+        done: list[Request] = []
+        while pending or self.n_active:
+            while pending and self._free_slot() is not None:
+                self.submit(pending.pop(0))
+            done.extend(self.step())
+        return done

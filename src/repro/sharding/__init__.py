@@ -1,0 +1,8 @@
+from repro.sharding.partition import (  # noqa: F401
+    axis_rules,
+    current_mesh,
+    make_named_sharding,
+    param_pspecs,
+    shard,
+    use_mesh,
+)

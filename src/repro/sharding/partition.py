@@ -1,0 +1,259 @@
+"""Logical-axis sharding rules (MaxText-style) + parameter PartitionSpecs.
+
+The baseline distribution scheme (see DESIGN.md §5) is uniform across all 10
+architectures:
+
+  * residual stream (train/prefill): **sequence-parallel** over `model`
+    — activations P(batch, model, None); this is the TPU mesh analogue of
+    OpenEye streaming different IACT rows to different PE columns.
+  * attention: q stays sequence-sharded; K/V are gathered (small, GQA);
+    decode KV caches are sharded over `model` on the *sequence* axis with
+    GSPMD partial-softmax reductions — the PSUM-bus analogue.
+  * FFN / MoE experts: Megatron TP over `model` with sequence-parallel
+    boundaries (all-gather in, reduce-scatter out).
+  * weights: FSDP over `data` (ZeRO-3 gather-on-use), replicated over `pod`;
+    embeddings / LM head vocab-parallel over `model`.
+
+Logical axis names used by the model code:
+  "batch"     -> (pod, data)      "model"/"model_ff"/"model_vocab" -> model
+  "seq"       -> model (sequence parallelism)     "fsdp" -> data
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _mesh_axis_names(mesh) -> tuple:
+    return tuple(mesh.axis_names) if mesh is not None else ()
+
+
+def default_rules(mesh) -> dict:
+    names = _mesh_axis_names(mesh)
+    has_pod = "pod" in names
+    batch = ("pod", "data") if has_pod else (("data",) if "data" in names else None)
+    model = "model" if "model" in names else None
+    token_axes = tuple(a for a in ("pod", "data", "model") if a in names)
+    return {
+        "batch": batch,
+        "tokens": token_axes or None,   # fully-sharded flat token streams
+        "fsdp": "data" if "data" in names else None,
+        "seq": model,            # sequence parallelism over the model axis
+        "model": model,
+        "model_ff": model,
+        "model_vocab": model,
+        "model_heads": model,
+        "expert": None,          # flipped to an axis by the EP profile
+    }
+
+
+# Sharding profiles = OpenEye's runtime-reconfigurable routers: the same mesh,
+# different dataflow. Selected per (arch x shape) during perf iteration.
+def profile_rules(mesh, profile: str) -> dict:
+    rules = default_rules(mesh)
+    names = _mesh_axis_names(mesh)
+    if profile == "baseline":
+        return rules
+    if profile == "dp_only":
+        # small models: every chip holds a full replica slice of the batch;
+        # the `model` axis becomes extra data parallelism (+FSDP storage).
+        batch = tuple(a for a in ("model", "data") if a in names)
+        rules.update(batch=batch, seq=None, model=None, model_ff=None,
+                     model_heads=None, model_vocab=None,
+                     fsdp=tuple(a for a in ("data", "model") if a in names))
+        return rules
+    if profile == "serve_resident":
+        # serving: weights fully resident (model-sharded, replicated over
+        # data) — stream weights once, like OpenEye's single-transmission
+        # layer; kills the per-step FSDP all-gathers.
+        rules.update(fsdp=None)
+        return rules
+    if profile == "ep_data":
+        # MoE expert parallelism: experts sharded over `data` (weights
+        # stationary, tokens routed via all-to-all), expert FFN TP over
+        # `model`; dense weights stay FSDP.  (Refuted in §Perf: the TP
+        # all-reduce on the capacity-inflated dispatch buffer dominates.)
+        rules.update(expert="data")
+        return rules
+    if profile == "ep_model":
+        # EP over `model`: one expert (group) per model-chip, expert FFN
+        # unsharded within the chip => NO all-reduce after the expert
+        # down-projection; tokens all-to-all over `model`; groups stay
+        # data-sharded. The dense/attention layers keep the baseline rules.
+        rules.update(expert="model")
+        return rules
+    if profile == "ep_serve":
+        rules.update(expert="model", fsdp=None)
+        return rules
+    raise KeyError(f"unknown sharding profile {profile!r}")
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules or (default_rules(mesh) if mesh is not None else {}))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh():
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def axis_rules():
+    ctx = getattr(_state, "ctx", None)
+    return ctx[1] if ctx else {}
+
+
+def resolve(logical_spec) -> P:
+    """Map a tuple of logical axis names (or None) to a PartitionSpec."""
+    rules = axis_rules()
+    out = []
+    for name in logical_spec:
+        if name is None:
+            out.append(None)
+        else:
+            out.append(rules.get(name))
+    return P(*out)
+
+
+def shard(x, *logical_spec):
+    """with_sharding_constraint under the active mesh; identity otherwise."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = _sanitize(resolve(logical_spec), getattr(x, "shape", ()))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def make_named_sharding(*logical_spec) -> Optional[NamedSharding]:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(logical_spec))
+
+
+# ------------------------------------------------------------------ params
+
+# Leaf-name -> logical spec template (rank must match the *unstacked* leaf;
+# leading scan-stack dims are padded with None automatically).
+PARAM_RULES: dict[str, tuple] = {
+    # embeddings: vocab-parallel + FSDP
+    "emb": ("model_vocab", "fsdp"),
+    "lm_head": ("fsdp", "model_vocab"),
+    # attention (sequence-parallel scheme: weights replicated over model)
+    "wq": ("fsdp", None),
+    "wk": ("fsdp", None),
+    "wv": ("fsdp", None),
+    "wo": (None, "fsdp"),
+    "qnorm": (None,),
+    "knorm": (None,),
+    # dense MLP: Megatron TP
+    "w_gate": ("fsdp", "model_ff"),
+    "w_up": ("fsdp", "model_ff"),
+    "w_down": ("model_ff", "fsdp"),
+    # MoE
+    "router": (None, None),
+    "e_gate": ("expert", "fsdp", "model_ff"),
+    "e_up": ("expert", "fsdp", "model_ff"),
+    "e_down": ("expert", "model_ff", "fsdp"),
+    # RG-LRU (channels TP-sharded; gates are block-diagonal per head)
+    "rg_in": ("fsdp", "model_ff"),
+    "rg_gate_in": ("fsdp", "model_ff"),
+    "rg_out": ("model_ff", "fsdp"),
+    "conv_w": (None, "model_ff"),
+    "rg_wa": ("model_heads", None, None),
+    "rg_wx": ("model_heads", None, None),
+    "rg_lambda": ("model_ff",),
+    # RWKV6 (d-sharded TP within block)
+    "wr": ("fsdp", "model_ff"),
+    "wkk": ("fsdp", "model_ff"),
+    "wvv": ("fsdp", "model_ff"),
+    "wg": ("fsdp", "model_ff"),
+    "w_out": ("model_ff", "fsdp"),
+    "w_lora_a": (None, None),
+    "w_lora_b": (None, "model_ff"),
+    "w_base": ("model_ff",),
+    "mu": (None, None),
+    "u_bonus": ("model_heads", None),
+    "cm_k": ("fsdp", "model_ff"),
+    "cm_v": ("model_ff", "fsdp"),
+    "cm_r": ("fsdp", None),
+    "mu_cm": (None, None),
+    # norms / scalars
+    "norm1": (None,),
+    "norm2": (None,),
+    "norm3": (None,),
+    "norm_f": (None,),
+    "scale": (None,),
+    "bias": (None,),
+}
+
+
+def _sanitize(spec: P, shape) -> P:
+    """Drop mesh axes that do not divide the corresponding dim, and axes
+    already used by an earlier dim (profiles may map two logical axes to the
+    same mesh axis — first use wins)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return spec
+    out = []
+    used: set = set()
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        keep = []
+        size = 1
+        for a in axes:
+            if a in used:
+                continue
+            n = mesh.shape[a]
+            if shape[i] % (size * n) == 0:
+                keep.append(a)
+                used.add(a)
+                size *= n
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def _spec_for_leaf(path, leaf) -> P:
+    name = None
+    for entry in reversed(path):
+        key = getattr(entry, "key", None) or getattr(entry, "name", None)
+        if isinstance(key, str):
+            name = key
+            break
+    rank = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+    if name is None or name not in PARAM_RULES:
+        return P()
+    template = PARAM_RULES[name]
+    pad = rank - len(template)
+    if pad < 0:
+        return P()
+    return _sanitize(resolve((None,) * pad + tuple(template)),
+                     getattr(leaf, "shape", ()))
+
+
+def param_pspecs(params_tree):
+    """Mirror a (possibly abstract) param pytree with PartitionSpecs."""
+    return jax.tree_util.tree_map_with_path(_spec_for_leaf, params_tree)
+
+
+def param_shardings(params_tree):
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), param_pspecs(params_tree),
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,101 @@
+"""AdamW + LR schedules, written from scratch in pure JAX.
+
+Optimizer state is a pytree mirroring the params (so parameter sharding
+rules apply to the moments verbatim — FSDP shards optimizer state for free,
+ZeRO-style).  Includes global-norm clipping and an optional Adafactor-style
+factored second moment for memory-constrained very large models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    factored: bool = False      # Adafactor-style factored v for 2D params
+
+
+def lr_schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decayed = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, decayed)
+
+
+def _use_factored(cfg: OptConfig, p) -> bool:
+    return cfg.factored and p.ndim >= 2 and p.shape[-1] >= 128 and p.shape[-2] >= 128
+
+
+def init_opt_state(cfg: OptConfig, params):
+    def init_leaf(p):
+        m = jnp.zeros_like(p, jnp.float32)
+        if _use_factored(cfg, p):
+            vr = jnp.zeros(p.shape[:-1], jnp.float32)
+            vc = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return {"m": m, "vr": vr, "vc": vc}
+        return {"m": m, "v": jnp.zeros_like(p, jnp.float32)}
+    return {"mu_v": jax.tree_util.tree_map(init_leaf, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+
+
+def adamw_update(cfg: OptConfig, grads, opt_state, params, step):
+    """Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else 1.0
+    lr = lr_schedule(cfg, step)
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** c
+    bc2 = 1.0 - cfg.b2 ** c
+
+    def upd(p, g, st):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * st["m"] + (1 - cfg.b1) * g
+        if "v" in st:
+            v = cfg.b2 * st["v"] + (1 - cfg.b2) * jnp.square(g)
+            vhat = v / bc2
+            new_st = {"m": m, "v": v}
+        else:
+            g2 = jnp.square(g)
+            vr = cfg.b2 * st["vr"] + (1 - cfg.b2) * g2.mean(-1)
+            vc = cfg.b2 * st["vc"] + (1 - cfg.b2) * g2.mean(-2)
+            vhat = (vr[..., None] * vc[..., None, :] /
+                    jnp.maximum(vc.mean(-1)[..., None, None], 1e-30)) / bc2
+            new_st = {"m": m, "vr": vr, "vc": vc}
+        mhat = m / bc1
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_st
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(opt_state["mu_v"])
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_params, {"mu_v": new_mu_v, "count": count}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,101 @@
+"""Train-step builder: value_and_grad + AdamW, with optional microbatched
+gradient accumulation (lax.scan) — the natural preemption/straggler boundary
+at scale — and a bf16 gradient-compression boundary for cross-device
+reductions.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.loss import cross_entropy
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+@jax.custom_vjp
+def _bf16_grad_boundary(x):
+    return x
+
+
+def _fwd(x):
+    return x, None
+
+
+def _bwd(_, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype),)
+
+
+_bf16_grad_boundary.defvjp(_fwd, _bwd)
+
+
+def make_loss_fn(api, *, grad_compression: bool = False):
+    def loss_fn(params, batch):
+        logits, aux = api.forward_train(params, batch)
+        if grad_compression:
+            logits = _bf16_grad_boundary(logits)
+        loss, metrics = cross_entropy(logits, batch["labels"])
+        total = loss + AUX_LOSS_WEIGHT * aux
+        metrics = dict(metrics, aux_loss=aux, total_loss=total)
+        return total, metrics
+    return loss_fn
+
+
+def _to_bf16(tree):
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.bfloat16)
+        if jnp.issubdtype(p.dtype, jnp.floating) and p.dtype != jnp.bfloat16
+        else p, tree)
+
+
+def build_train_step(api, opt_cfg: OptConfig, *, microbatches: int = 1,
+                     grad_compression: bool = False,
+                     cast_params_bf16: bool = True):
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics).
+
+    cast_params_bf16: differentiate w.r.t. a bf16 cast of the fp32 master
+    params (classic mixed precision).  This guarantees the FSDP gather-on-use
+    all-gathers AND the data-parallel gradient reductions ride on bf16 wires
+    — halving both vs fp32 (measured in §Perf) — while AdamW still updates
+    the fp32 master.
+    """
+    loss_fn = make_loss_fn(api, grad_compression=grad_compression)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        fwd_params = _to_bf16(params) if cast_params_bf16 else params
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(fwd_params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb_batch = jax.tree_util.tree_map(split, batch)
+
+            def body(acc, mb):
+                (_, m), g = grad_fn(fwd_params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, m
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(body, zeros, mb_batch)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+
+        new_params, new_opt_state, om = adamw_update(
+            opt_cfg, grads, opt_state, params, step)
+        return new_params, new_opt_state, dict(metrics, **om)
+
+    return train_step
+
+
+def init_train_state(api, opt_cfg: OptConfig, key):
+    params = api.init(key)
+    return params, init_opt_state(opt_cfg, params)

@@ -1,0 +1,29 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.configs import get_config, reduced
+from repro.launch import specs as SP
+from repro.models import model_api
+from repro.sharding import partition as sp
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.step import build_train_step
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+for arch, profile in [("qwen3-0.6b", "dp_only"), ("mixtral-8x7b", "ep_data"),
+                      ("mixtral-8x7b", "serve_resident"), ("dbrx-132b", "ep_data")]:
+    cfg = reduced(get_config(arch), n_experts=4 if get_config(arch).n_experts else 0)
+    api = model_api(cfg)
+    rules = sp.profile_rules(mesh, profile)
+    # make expert axis work at reduced scale: 4 experts over data=4
+    with sp.use_mesh(mesh, rules):
+        params = api.init(jax.random.PRNGKey(0))
+        shardings = sp.param_shardings(params)
+        params = jax.tree_util.tree_map(jax.device_put, params, shardings)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 33), 0, cfg.vocab_size)
+        batch = {"tokens": toks[:, :32], "labels": toks[:, 1:]}
+        opt_cfg = OptConfig(warmup_steps=1, decay_steps=5)
+        opt = init_opt_state(opt_cfg, params)
+        step = jax.jit(build_train_step(api, opt_cfg))
+        _, _, m = step(params, opt, batch, jnp.int32(1))
+        print(f"{arch:14s} {profile:15s} loss={float(m['loss']):.4f} ok")
+print("PROFILES_OK")

@@ -1,0 +1,14 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device override is
+# *only* for launch/dryrun.py, per the assignment).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

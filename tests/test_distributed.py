@@ -1,0 +1,25 @@
+"""Multi-device semantics via subprocess (XLA device-count env must precede
+jax import, so these run in child processes)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHILD = os.path.join(ROOT, "tests", "_dist_child.py")
+
+
+def _run_child(arch: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, CHILD, arch], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "DIST_OK" in out.stdout, out.stdout
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mixtral-8x7b"])
+def test_sharded_semantics_8dev(arch):
+    _run_child(arch)

@@ -1,0 +1,154 @@
+"""Per-kernel correctness: shape/dtype/sparsity sweeps against the ref.py
+pure-jnp oracles (interpret mode = the kernel body executed on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparsity import (apply_mask, magnitude_block_mask, nm_prune,
+                                 pack, random_block_mask, unpack)
+from repro.kernels import ops
+from repro.kernels.block_spmm import block_spmm
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.dual_sparse import dual_sparse_matmul
+from repro.kernels import ref as R
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape,block,density", [
+    ((256, 512, 384), (128, 128), 0.5),
+    ((128, 256, 256), (128, 128), 0.25),
+    ((256, 384, 128), (128, 128), 1.0),
+    ((64, 256, 128), (128, 128), 0.6),
+])
+def test_block_spmm_sweep(shape, block, density, dtype):
+    M, K, N = shape
+    bk, bn = block
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N), jnp.float32)
+    mask = random_block_mask(jax.random.PRNGKey(1), K // bk, N // bn, density)
+    sw = pack(w.astype(dtype), mask, bk, bn)
+    x = jax.random.normal(jax.random.PRNGKey(2), (M, K), jnp.float32).astype(dtype)
+    y = block_spmm(x, sw, bm=min(128, M))
+    yref = R.block_spmm_ref(x, sw)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yref, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("thr", [0.0, 2.5, 4.0, 100.0])
+def test_dual_sparse(thr):
+    M, K, N, bk, bn = 256, 512, 256, 128, 128
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N), jnp.float32)
+    sw = pack(w, random_block_mask(jax.random.PRNGKey(1), K // bk, N // bn, .5),
+              bk, bn)
+    x = jax.random.normal(jax.random.PRNGKey(2), (M, K), jnp.float32)
+    y = dual_sparse_matmul(x, sw, act_threshold=thr)
+    yref = R.dual_sparse_ref(x, sw, thr)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=2e-5, atol=2e-4)
+    if thr >= 100.0:   # everything gated -> exactly zero
+        assert float(jnp.abs(y).max()) == 0.0
+
+
+@pytest.mark.parametrize("G,D,L,win", [
+    (4, 64, 512, None), (1, 128, 1024, None), (8, 64, 512, 128),
+])
+def test_decode_attention(G, D, L, win):
+    B, Hkv = 2, 2
+    Hq = Hkv * G
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, Hq, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, L, Hkv, D), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, L, Hkv, D), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+    pos = jnp.where(pos < L - 37, pos, -1)
+    t = jnp.int32(L - 38)
+    o = decode_attention(q, k, v, pos, t, window=win)
+    oref = R.decode_attention_ref(q, k, v, pos, t, window=win)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sparse_conv2d_matches_lax():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 14, 14, 16), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 16, 32),
+                          jnp.float32) * 0.1
+    sw, meta = ops.pack_conv_weight(w, density=1.0)
+    y = ops.sparse_conv2d(x, sw, meta)
+    yref = R.conv2d_ref(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- property
+
+
+@settings(max_examples=15, deadline=None)
+@given(kb=st.integers(1, 4), nb=st.integers(1, 3),
+       density=st.floats(0.1, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(kb, nb, density, seed):
+    bk = bn = 8
+    K, N = kb * bk, nb * bn
+    w = jax.random.normal(jax.random.PRNGKey(seed % 997), (K, N), jnp.float32)
+    mask = random_block_mask(jax.random.PRNGKey(seed % 991), kb, nb, density)
+    sw = pack(w, mask, bk, bn)
+    dense = unpack(sw)
+    expect = apply_mask(w, mask, bk, bn)
+    assert bool(jnp.array_equal(dense, expect))
+    # idx entries within range, padding is -1
+    idx = np.asarray(sw.idx)
+    assert ((idx >= -1) & (idx < kb)).all()
+    nnz = np.asarray(sw.nnz)
+    assert ((idx >= 0).sum(axis=1) == nnz).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 4), groups=st.integers(1, 8),
+       cols=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_nm_prune_invariant(n, groups, cols, seed):
+    m = 4
+    n = min(n, m)
+    w = jax.random.normal(jax.random.PRNGKey(seed % 997),
+                          (groups * m, cols), jnp.float32)
+    pruned = nm_prune(w, n=n, m=m)
+    nz = (np.asarray(pruned).reshape(groups, m, cols) != 0).sum(axis=1)
+    assert (nz <= n).all()
+    # surviving entries are the largest-|.| ones
+    g = np.abs(np.asarray(w).reshape(groups, m, cols))
+    kept = np.abs(np.asarray(pruned).reshape(groups, m, cols)) > 0
+    for gi in range(groups):
+        for c in range(cols):
+            if kept[gi, :, c].sum() == n:
+                thresh = np.sort(g[gi, :, c])[-n]
+                assert (g[gi, kept[gi, :, c], c] >= thresh - 1e-6).all()
+
+
+def test_magnitude_block_mask_density():
+    w = jax.random.normal(jax.random.PRNGKey(0), (512, 512), jnp.float32)
+    mask = magnitude_block_mask(w, 128, 128, 0.5)
+    frac = float(jnp.mean(mask.astype(jnp.float32)))
+    assert 0.4 <= frac <= 0.7
+    # kept blocks have >= norm than dropped blocks
+    norms = np.square(np.asarray(w).reshape(4, 128, 4, 128)).sum(axis=(1, 3))
+    m = np.asarray(mask)
+    assert norms[m].min() >= norms[~m].max() - 1e-6
+
+
+@pytest.mark.parametrize("causal,win", [(True, None), (False, None),
+                                        (True, 64), (True, 128)])
+def test_flash_attention_forward(causal, win):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.layers import attention_full_blockwise
+    B, Sq, Hkv, G, D = 2, 256, 2, 3, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, Sq, Hkv * G, D),
+                          jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Sq, Hkv, D), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Sq, Hkv, D), jnp.float32)
+    o = flash_attention(q, k, v, causal=causal, window=win,
+                        block_q=64, block_kv=64)
+    oref = attention_full_blockwise(q, k, v, q_offset=0, causal=causal,
+                                    window=win)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,56 @@
+"""The perfmodel must reproduce the paper's Table 3 within tolerance —
+this is the quantitative validation of the faithful reproduction."""
+import math
+
+from repro.core import perfmodel as pm
+
+
+def test_paper_ops_count_discovery():
+    # the paper's 2.13 MOPs == 2 * (c1+c2+d1+d2) MACs — conv3 excluded
+    assert pm.PAPER_OPS == 2_133_120
+    for rows, x, y, s, p, t, mops_p, mops_t in pm.PAPER_TABLE3:
+        implied = mops_p * 1e6 * p * 1e-9
+        assert abs(implied - pm.PAPER_OPS) / pm.PAPER_OPS < 0.001
+
+
+def test_table3_tolerances():
+    errs_s, errs_p = [], []
+    for _cfg, _paper, _model, es, ep in pm.table3_comparison():
+        errs_s.append(es)
+        errs_p.append(ep)
+    assert sum(errs_s) / len(errs_s) < 0.06, "send model mean err too high"
+    assert max(errs_s) < 0.12
+    assert sum(errs_p) / len(errs_p) < 0.05, "proc model mean err too high"
+    assert max(errs_p) < 0.10
+
+
+def test_processing_scales_near_linearly():
+    # paper: raw processing throughput ~proportional to clusters
+    for x, y in [(2, 3), (4, 3), (4, 4)]:
+        m1, m8 = pm.evaluate(1, x, y), pm.evaluate(8, x, y)
+        assert 3.0 < m8.mops_proc / m1.mops_proc < 8.0
+
+
+def test_transmission_dominates_at_scale():
+    # paper: MOPS_total saturates because data transmission dominates
+    m1, m8 = pm.evaluate(1, 4, 3), pm.evaluate(8, 4, 3)
+    proc_gain = m8.mops_proc / m1.mops_proc
+    total_gain = m8.mops_total / m1.mops_total
+    assert total_gain < 0.6 * proc_gain
+    assert m8.send_ns > 2 * m8.proc_ns      # send-bound at 8 clusters
+
+
+def test_y_dim_limited_benefit():
+    # paper: PE-Y scaling barely helps 3x3-conv-dominated workloads
+    y3, y4 = pm.evaluate(1, 2, 3), pm.evaluate(1, 2, 4)
+    assert abs(y3.proc_ns - y4.proc_ns) / y3.proc_ns < 0.05
+
+
+def test_resources_strictly_linear():
+    for x, y in [(2, 3), (4, 3), (4, 4)]:
+        r = [pm.resources(n, x, y) for n in (1, 2, 4, 8)]
+        for key in ("DSP", "BRAM", "CLB"):
+            d1 = r[1][key] - r[0][key]
+            d2 = (r[2][key] - r[1][key]) / 2
+            d3 = (r[3][key] - r[2][key]) / 4
+            assert math.isclose(d1, d2) and math.isclose(d2, d3)
