@@ -1,0 +1,177 @@
+"""Mapper search driver: default vs tuned tile latency, per measured shape.
+
+For each benchmark shape the driver times
+
+  * the pre-mapper hardcoded schedule (bm=128 for the sparse matmuls,
+    block_q=block_kv=512 for flash attention), and
+  * the mapper's selection, refined on-device: the analytic top-k *plus the
+    old default* are measured and the fastest wins — so the tuned schedule
+    is never slower than the default on any measured shape (it can only tie
+    by picking the default back).
+
+Emits ``BENCH_mapper.json`` (the perf-trajectory artifact CI uploads) and
+contributes rows to the shared benchmark CSV via ``run(csv_rows)``.
+
+Timings are interpret-mode wall clock on CPU unless a real TPU is attached
+— relative orderings are what the refinement consumes; the analytic model
+provides the shortlist.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import pack, random_block_mask
+from repro.kernels.block_spmm import _block_spmm
+from repro.kernels.flash_attention import _flash_attention
+from repro.mapper import Mapper, Mapping, MappingCache, time_fn
+from repro.mapper import cost as C
+from repro.mapper import space as S
+
+SPMM_SHAPES = (
+    # M, K, N, density
+    (256, 512, 512, 0.5),
+    (128, 512, 1024, 0.25),
+    (512, 256, 256, 1.0),
+)
+ATTN_SHAPES = (
+    # B, Sq, Hkv, G, D, causal, window
+    (1, 512, 2, 2, 64, True, None),
+    (1, 1024, 1, 4, 64, True, 256),
+)
+
+OLD_SPMM_BM = 128          # the constants the mapper replaced
+OLD_ATTN_BLOCK = 512
+
+
+def _measure_spmm(M, K, N, density, mapper: Mapper, *, iters: int):
+    bk = bn = 128
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    mask = random_block_mask(jax.random.PRNGKey(2), K // bk, N // bn, density)
+    sw = pack(w, mask, bk, bn)
+    x = jax.random.normal(jax.random.PRNGKey(3), (M, K), jnp.float32)
+
+    default = Mapping("spmm", bm=min(OLD_SPMM_BM, M), bk=bk, bn=bn,
+                      wbk=bk, wbn=bn)
+    measured: dict[Mapping, float] = {}
+
+    def timer(m: Mapping) -> float:
+        if m not in measured:
+            measured[m] = time_fn(
+                lambda: _block_spmm(x, sw, mapping=m, interpret=True),
+                warmup=1, iters=iters)
+        return measured[m]
+
+    timer(default)
+    tuned = mapper.matmul(M, K, N, jnp.float32, op_class="spmm", wbk=bk,
+                          wbn=bn, occupancy=sw.density, refine=timer)
+    # the default competes in the measured pool: fastest measured wins
+    pool = set(measured) | {tuned}
+    tuned = min(pool, key=timer)
+    return default, tuned, measured[default], measured[tuned]
+
+
+def _measure_attention(B, Sq, Hkv, G, D, causal, window, mapper: Mapper, *,
+                       iters: int):
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, Sq, Hkv * G, D),
+                          jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, Sq, Hkv, D), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, Sq, Hkv, D), jnp.float32)
+
+    default = Mapping("attention", bm=min(OLD_ATTN_BLOCK, Sq),
+                      bk=min(OLD_ATTN_BLOCK, Sq), bn=D)
+    measured: dict[Mapping, float] = {}
+
+    def timer(m: Mapping) -> float:
+        if m not in measured:
+            measured[m] = time_fn(
+                lambda: _flash_attention(q, k, v, causal=causal,
+                                         window=window, mapping=m,
+                                         interpret=True),
+                warmup=1, iters=iters)
+        return measured[m]
+
+    timer(default)
+    tuned = mapper.attention(B, Sq, Sq, Hkv, G, D, jnp.float32,
+                             causal=causal, window=window, refine=timer)
+    pool = set(measured) | {tuned}
+    tuned = min(pool, key=timer)
+    return default, tuned, measured[default], measured[tuned]
+
+
+def search(*, iters: int = 3, quick: bool = False,
+           cache_path: str | None = None) -> dict:
+    mapper = Mapper(MappingCache(cache_path))
+    spmm = SPMM_SHAPES[:1] if quick else SPMM_SHAPES
+    attn = ATTN_SHAPES[:1] if quick else ATTN_SHAPES
+    results = []
+    for M, K, N, density in spmm:
+        d, t, dus, tus = _measure_spmm(M, K, N, density, mapper, iters=iters)
+        results.append({
+            "op": "spmm", "shape": [M, K, N], "density": density,
+            "default_mapping": d.to_json(), "tuned_mapping": t.to_json(),
+            "default_us": dus * 1e6, "tuned_us": tus * 1e6,
+            "speedup": dus / tus if tus else 1.0,
+        })
+    for B, Sq, Hkv, G, D, causal, window in attn:
+        d, t, dus, tus = _measure_attention(B, Sq, Hkv, G, D, causal, window,
+                                            mapper, iters=iters)
+        results.append({
+            "op": "attention", "shape": [B, Sq, Hkv, G, D],
+            "causal": causal, "window": window,
+            "default_mapping": d.to_json(), "tuned_mapping": t.to_json(),
+            "default_us": dus * 1e6, "tuned_us": tus * 1e6,
+            "speedup": dus / tus if tus else 1.0,
+        })
+    if cache_path:
+        mapper.cache.save(cache_path)
+    return {"backend": jax.default_backend(), "interpret": True,
+            "results": results,
+            "analytic_space_sizes": {
+                "spmm_256x512x512": len(S.enumerate_matmul(
+                    256, 512, 512, jnp.float32, wbk=128, wbn=128)),
+                "attn_1x512": len(S.enumerate_attention(
+                    1, 512, 512, 2, 2, 64, jnp.float32)),
+            },
+            "vmem_budget_bytes": C.VMEM_BUDGET}
+
+
+def run(csv_rows: list) -> None:
+    """benchmarks/run.py entry: quick sweep, rows into the shared CSV."""
+    doc = search(iters=2, quick=True)
+    for r in doc["results"]:
+        shape = "x".join(str(s) for s in r["shape"])
+        csv_rows.append((f"mapper_{r['op']}_{shape}_default",
+                         r["default_us"], "pre-mapper schedule"))
+        csv_rows.append((f"mapper_{r['op']}_{shape}_tuned", r["tuned_us"],
+                         f"speedup={r['speedup']:.2f}"))
+        print(f"  {r['op']} {shape}: default {r['default_us']:.0f}us "
+              f"-> tuned {r['tuned_us']:.0f}us ({r['speedup']:.2f}x) "
+              f"mapping={r['tuned_mapping']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_mapper.json")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--cache", default=None,
+                    help="persist tuned mappings to this JSON cache")
+    args = ap.parse_args()
+    doc = search(iters=args.iters, quick=args.quick, cache_path=args.cache)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    worst = min((r["speedup"] for r in doc["results"]), default=1.0)
+    print(f"wrote {args.out}; {len(doc['results'])} shapes, "
+          f"worst speedup {worst:.2f}x (>= 1.0 by construction)")
+    for r in doc["results"]:
+        print(f"  {r['op']} {r['shape']}: {r['default_us']:.0f}us -> "
+              f"{r['tuned_us']:.0f}us")
+
+
+if __name__ == "__main__":
+    main()

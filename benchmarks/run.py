@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV at the end.
   table2_cnn       — Table 2 workload on the sparse Pallas kernels
   kernel_sparsity  — compressed-domain execution sweep
   roofline_table   — 40-cell TPU roofline from the dry-run artifacts
+  mapper_search    — default vs mapper-tuned kernel schedules
 """
 from __future__ import annotations
 
@@ -13,11 +14,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (fig5_resources, kernel_sparsity, roofline_table,
-                            table2_cnn, table3_scaling)
+    from benchmarks import (fig5_resources, kernel_sparsity, mapper_search,
+                            roofline_table, table2_cnn, table3_scaling)
     csv_rows: list = []
     for mod in (table3_scaling, fig5_resources, table2_cnn, kernel_sparsity,
-                roofline_table):
+                roofline_table, mapper_search):
         name = mod.__name__.split(".")[-1]
         print(f"\n==== {name} ====", flush=True)
         try:

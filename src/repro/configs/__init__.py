@@ -5,6 +5,7 @@ import importlib
 
 from repro.configs.base import (  # noqa: F401
     SHAPES,
+    MapperConfig,
     ModelConfig,
     ShapeSpec,
     SparsityConfig,

@@ -25,6 +25,32 @@ RECURRENT_CODES = ("R", "W")
 
 
 @dataclass(frozen=True)
+class MapperConfig:
+    """Dataflow-mapper settings (src/repro/mapper): how kernel schedules
+    are picked for this model's ops.  ``cache_path=None`` keeps tuned
+    mappings in-memory only; set a path (or $REPRO_MAPPING_CACHE) to
+    persist winners across processes.
+
+    Consumed by ``ServeEngine`` (a config with ``mapper`` set gets its own
+    Mapper instead of the process default).  To make trace-time resolution
+    in ``models/layers.py`` use it too, install it globally:
+    ``set_default_mapper(cfg.mapper.build())``.  On-device timing
+    refinement is per-call (pass ``refine=`` a timer to ``Mapper.matmul``/
+    ``attention``, as benchmarks/mapper_search.py does) — it needs a
+    concrete kernel to time, so it is not a config flag."""
+    cache_path: Optional[str] = None
+    vmem_budget_bytes: int = 8 * 2 ** 20    # half of ~16 MB/core
+    autosave: bool = False
+
+    def build(self):
+        """Instantiate a ``repro.mapper.Mapper`` from this config."""
+        from repro.mapper import Mapper
+        return Mapper(cache_path=self.cache_path,
+                      vmem_budget=self.vmem_budget_bytes,
+                      autosave=self.autosave)
+
+
+@dataclass(frozen=True)
 class SparsityConfig:
     """OpenEye's core technique: block-sparse weights (+ optional activation
     gating), adapted to TPU block granularity.
@@ -75,6 +101,7 @@ class ModelConfig:
     remat_policy: str = "nothing_saveable"   # nothing_saveable | dots | none
     scan_layers: bool = True
     sparsity: Optional[SparsityConfig] = None
+    mapper: Optional[MapperConfig] = None   # None => process-default mapper
     use_pallas: bool = False            # Pallas path for sparse FFN (interpret on CPU)
     attn_scores_bf16: bool = False      # store attention score blocks bf16
     #   (MXU accumulates fp32 internally; halves score HBM traffic — §Perf)

@@ -23,12 +23,18 @@ Reproduction findings (validated against the paper's own numbers):
     paper's "communication becomes the bottleneck" mechanism.
 
 The same decomposition (send ~ collective term, proc ~ compute term) is what
-the TPU roofline in core/roofline.py applies to the LM cells.
+the TPU roofline in core/roofline.py applies to the LM cells, and what the
+mapper's generalized cost model (mapper/cost.py) scores TPU kernel
+schedules with — this module now *builds* its proc/send times from those
+shared ``compute_term``/``stream_term`` primitives.  Predictions are pinned
+to their pre-refactor values by tests/test_mapper.py.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+
+from repro.mapper.cost import compute_term, stream_term
 
 # ---- hardware constants (from the paper) ----
 CLK_NS = 5.0                  # 200 MHz
@@ -59,25 +65,28 @@ DENSE_DUP_CAP = 4             # dense1 duplicated ceil(cap/X) times
 
 
 def proc_ns(rows: int, pe_x: int, pe_y: int) -> float:
-    """Processing time (ns) for CLUSTER_ROWS x (PE_X, PE_Y)."""
+    """Processing time (ns) for CLUSTER_ROWS x (PE_X, PE_Y): two compute
+    terms (conv at Y-efficiency min(Y,3)/Y, dense at full Y) plus the
+    calibrated pipeline fill/drain floor."""
     conv_macs = sum(m for m, _, _ in CONV_LAYERS)
     dense_macs = sum(m for m, _ in DENSE_LAYERS)
-    cyc = conv_macs / (SIMD * rows * pe_x * min(pe_y, 3)) \
-        + dense_macs / (SIMD * rows * pe_x * pe_y)
+    cyc = compute_term(conv_macs, SIMD * rows * pe_x * min(pe_y, 3)) \
+        + compute_term(dense_macs, SIMD * rows * pe_x * pe_y)
     return cyc * CLK_NS + PROC_OVERHEAD_NS \
         + PROC_OVERHEAD_PER_LOG2R * math.log2(rows)
 
 
 def send_ns(rows: int, pe_x: int, pe_y: int) -> float:
-    """Data transmission time (ns): weights/config streamed at 1.6 GB/s,
-    duplicated per cluster up to the layer's usable parallelism."""
+    """Data transmission time (ns): one stream term — weights/config at
+    1.6 GB/s, duplicated per cluster up to the layer's usable parallelism,
+    on top of the fixed configuration/handshake stream."""
     ymul = pe_y / 3.0
     conv_bytes = sum(
         wb * min(rows, math.ceil(h / pe_x)) for _, wb, h in CONV_LAYERS)
     dense_bytes = DENSE_LAYERS[0][1] * min(rows, math.ceil(DENSE_DUP_CAP / pe_x))
-    total = SEND_BASE_BYTES + CONV_ENC * conv_bytes * ymul \
-        + DENSE_ENC * dense_bytes * ymul
-    return total / BUS_BYTES_PER_NS
+    return stream_term(
+        CONV_ENC * conv_bytes * ymul + DENSE_ENC * dense_bytes * ymul,
+        BUS_BYTES_PER_NS, base=SEND_BASE_BYTES)
 
 
 @dataclass

@@ -1,0 +1,10 @@
+"""Version shims for ``jax.experimental.pallas.tpu``.
+
+``TPUCompilerParams`` was renamed ``CompilerParams`` across JAX releases;
+resolve whichever this JAX ships so the kernels run on both sides of the
+rename.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -8,7 +8,10 @@ The TPU-native adaptation of OpenEye's sparse PE datapath:
   * the VMEM f32 scratch accumulator revisited along the sparse-K grid
     dimension is the "PSUM RAM" (the LVT multi-port trick has no TPU
     analogue — VMEM is software-scheduled; see DESIGN.md);
-  * block shapes default to (bm, bk, bn) = (128, 128, 128): MXU-aligned.
+  * the schedule (row-tile bm; bk/bn pinned to the pack granularity) comes
+    from a ``Mapping`` picked by the mapper subsystem — no hardcoded tile
+    constants; pass ``mapping=None`` to resolve through the default
+    mapper's cost model + cache.
 
 y[i, j] = sum_s x[i, idx[j, s]] @ blocks[j, s]      (s < nnz[j])
 """
@@ -21,7 +24,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.core.sparsity import BlockSparseWeight
+from repro.mapper.schema import Mapping
+
+
+def resolve_spmm_mapping(x, sw: BlockSparseWeight, *,
+                         act_occupancy: float = 1.0) -> Mapping:
+    """Mapper resolution for this kernel: bk/bn are the weight's pack
+    granularity; bm is searched under tiling/VMEM legality."""
+    from repro.mapper.search import default_mapper
+    M, K = x.shape
+    bk, bn = sw.block
+    return default_mapper().matmul(M, K, sw.shape[1], x.dtype, op_class="spmm",
+                                   wbk=bk, wbn=bn, occupancy=sw.density,
+                                   act_occupancy=act_occupancy)
 
 
 def _kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, max_nnz: int):
@@ -44,15 +62,25 @@ def _kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, max_nnz: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def block_spmm(x, sw: BlockSparseWeight, *, bm: int = 128, interpret: bool = True):
-    """x: (M, K) @ BCSC weight -> (M, N)."""
+def block_spmm(x, sw: BlockSparseWeight, *, mapping: Mapping | None = None,
+               interpret: bool = True):
+    """x: (M, K) @ BCSC weight -> (M, N), scheduled by ``mapping``."""
+    if mapping is None:
+        mapping = resolve_spmm_mapping(x, sw)
+    return _block_spmm(x, sw, mapping=mapping, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("mapping", "interpret"))
+def _block_spmm(x, sw: BlockSparseWeight, *, mapping: Mapping,
+                interpret: bool):
     M, K = x.shape
     Kn, N = sw.shape
     assert K == Kn, (x.shape, sw.shape)
     bk, bn = sw.block
     Nb, max_nnz = sw.idx.shape
-    bm = min(bm, M)
+    bm = min(mapping.bm, M)
+    assert (mapping.bk, mapping.bn) == (bk, bn), \
+        f"mapping K/N tiles {mapping.bk, mapping.bn} != pack granularity {sw.block}"
     assert M % bm == 0 and K % bk == 0 and N % bn == 0
 
     grid = (M // bm, Nb, max_nnz)
@@ -81,7 +109,7 @@ def block_spmm(x, sw: BlockSparseWeight, *, bm: int = 128, interpret: bool = Tru
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(sw.idx, x, sw.blocks)

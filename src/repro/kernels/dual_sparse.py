@@ -22,7 +22,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.core.sparsity import BlockSparseWeight
+from repro.kernels.block_spmm import resolve_spmm_mapping
+from repro.mapper.schema import Mapping
 
 
 def _kernel(idx_ref, gate_ref, x_ref, w_ref, o_ref, acc_ref, *, max_nnz: int):
@@ -46,18 +50,28 @@ def _kernel(idx_ref, gate_ref, x_ref, w_ref, o_ref, acc_ref, *, max_nnz: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("bm", "act_threshold", "interpret"))
 def dual_sparse_matmul(x, sw: BlockSparseWeight, *, act_threshold: float = 0.0,
-                       bm: int = 128, interpret: bool = True):
+                       mapping: Mapping | None = None, interpret: bool = True):
     """x: (M, K) @ BCSC weight with activation-block gating -> (M, N).
 
     Semantics: activation blocks with max-|x| <= act_threshold contribute
     zero (they are *treated* as zero, matching the oracle in ref.py)."""
+    if mapping is None:
+        mapping = resolve_spmm_mapping(x, sw)
+    return _dual_sparse_matmul(x, sw, act_threshold=act_threshold,
+                               mapping=mapping, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mapping", "act_threshold", "interpret"))
+def _dual_sparse_matmul(x, sw: BlockSparseWeight, *, act_threshold: float,
+                        mapping: Mapping, interpret: bool):
     M, K = x.shape
     bk, bn = sw.block
     Nb, max_nnz = sw.idx.shape
-    bm = min(bm, M)
+    bm = min(mapping.bm, M)
+    assert (mapping.bk, mapping.bn) == (bk, bn), \
+        f"mapping K/N tiles {mapping.bk, mapping.bn} != pack granularity {sw.block}"
     assert M % bm == 0 and K % bk == 0
 
     Mb, Kb = M // bm, K // bk
@@ -93,7 +107,7 @@ def dual_sparse_matmul(x, sw: BlockSparseWeight, *, act_threshold: float = 0.0,
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((M, sw.shape[1]), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(sw.idx, gate, xg, sw.blocks)

@@ -21,7 +21,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
+from repro.mapper.schema import Mapping
+
 NEG_INF = -1e30
+
+
+def resolve_attention_mapping(q, k, *, causal: bool, window) -> Mapping:
+    """Mapper resolution for this kernel: search (block_q, block_kv) under
+    VMEM legality, scored band-aware (causal/window skipping changes which
+    tile shape wins)."""
+    from repro.mapper.search import default_mapper
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    return default_mapper().attention(B, Sq, Skv, Hkv, Hq // Hkv, D, q.dtype,
+                                      causal=causal, window=window)
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -80,19 +95,27 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0, :, 0] = out.reshape(bq, G, D).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
-                                             "block_kv", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window=None,
-                    block_q: int = 512, block_kv: int = 512,
-                    interpret: bool = True):
+                    mapping: Mapping | None = None, interpret: bool = True):
     """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
 
-    GQA-aware (Hq = Hkv * G); scores live only in VMEM."""
+    GQA-aware (Hq = Hkv * G); scores live only in VMEM; the (block_q,
+    block_kv) schedule comes from ``mapping`` (default: mapper-resolved)."""
+    if mapping is None:
+        mapping = resolve_attention_mapping(q, k, causal=causal, window=window)
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            mapping=mapping, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "mapping",
+                                             "interpret"))
+def _flash_attention(q, k, v, *, causal: bool, window, mapping: Mapping,
+                     interpret: bool):
     B, Sq, Hq, D = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv
-    bq = min(block_q, Sq)
-    bk = min(block_kv, Skv)
+    bq = min(mapping.block_q, Sq)
+    bk = min(mapping.block_kv, Skv)
     assert Sq % bq == 0 and Skv % bk == 0
     nq, nk = Sq // bq, Skv // bk
     qg = q.reshape(B, Sq, Hkv, G, D)
@@ -114,7 +137,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
             pltpu.VMEM((bq * G, D), jnp.float32),
         ],
         out_shape=jax.ShapeDtypeStruct((B, Sq, Hkv, G, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

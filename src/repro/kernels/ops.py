@@ -11,13 +11,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparsity import BlockSparseWeight, pack, random_block_mask
-from repro.kernels.block_spmm import block_spmm
+from repro.core.sparsity import (BlockSparseWeight, magnitude_block_mask,
+                                 pack, random_block_mask)
+from repro.kernels.block_spmm import block_spmm, resolve_spmm_mapping
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.dual_sparse import dual_sparse_matmul
+from repro.mapper.schema import Mapping
 
 __all__ = ["block_spmm", "dual_sparse_matmul", "decode_attention",
-           "sparse_conv2d", "im2col", "sparse_dense"]
+           "sparse_conv2d", "im2col", "sparse_dense", "pack_dense_weight"]
 
 
 def im2col(x, kh: int, kw: int, *, stride: int = 1):
@@ -46,61 +48,75 @@ def _pad_to(x, m, axis):
 
 
 def sparse_conv2d(x, sw: BlockSparseWeight, meta, *, act_threshold=None,
-                  interpret: bool = True):
+                  mapping: Mapping | None = None, interpret: bool = True):
     """Conv via im2col + block-sparse matmul.
 
     x: (B, H, W, Cin); sw packs the (kh*kw*Cin, Cout) weight matrix, padded
-    to block multiples; meta: (kh, kw, Cin, Cout, stride).
+    to block multiples; meta: (kh, kw, Cin, Cout, stride).  The schedule is
+    mapper-resolved over the im2col matmul view (op class "conv").
     """
     kh, kw, cin, cout, stride = meta
     patches, (B, Ho, Wo) = im2col(x, kh, kw, stride=stride)
     patches = _pad_to(patches, sw.block[0], axis=1)
-    M = patches.shape[0]
-    bm = 128 if M % 128 == 0 else _largest_divisor(M, 128)
+    if mapping is None:
+        mapping = resolve_spmm_mapping(patches, sw)
     if act_threshold is not None:
         y = dual_sparse_matmul(patches, sw, act_threshold=float(act_threshold),
-                               bm=bm, interpret=interpret)
+                               mapping=mapping, interpret=interpret)
     else:
-        y = block_spmm(patches, sw, bm=bm, interpret=interpret)
+        y = block_spmm(patches, sw, mapping=mapping, interpret=interpret)
     return y[:, :cout].reshape(B, Ho, Wo, cout)
 
 
-def _largest_divisor(n: int, cap: int) -> int:
-    d = min(cap, n)
-    while n % d:
-        d -= 1
-    return d
-
-
-def pack_conv_weight(w, bk: int = 128, bn: int = 128, density: float = 1.0,
-                     mask=None):
-    """(kh, kw, Cin, Cout) -> BCSC over the im2col matrix (padded)."""
-    kh, kw, cin, cout = w.shape
-    wm = jnp.asarray(w).reshape(kh * kw * cin, cout)
+def pack_dense_weight(wm, *, density: float = 1.0, bk: int = 0, bn: int = 0,
+                      mask=None, magnitude: bool = False) -> BlockSparseWeight:
+    """Shared pack pipeline for any (K, N) weight matrix: resolve the
+    sparse-format block granularity through the mapper when bk/bn are 0,
+    pad to block multiples, build the block mask (magnitude- or
+    random-pruned at density < 1), and pack to BCSC."""
+    wm = jnp.asarray(wm)
+    if not (bk and bn):
+        from repro.mapper.search import default_mapper
+        gk, gn = default_mapper().pack_granularity(
+            wm.shape[0], wm.shape[1], wm.dtype, density=density)
+        bk, bn = bk or gk, bn or gn
     wm = _pad_to(_pad_to(wm, bk, 0), bn, 1)
-    K, N = wm.shape
+    Kb, Nb = wm.shape[0] // bk, wm.shape[1] // bn
     if mask is None:
         if density >= 1.0:
-            mask = jnp.ones((K // bk, N // bn), bool)
+            mask = jnp.ones((Kb, Nb), bool)
+        elif magnitude:
+            mask = magnitude_block_mask(wm, bk, bn, density)
         else:
-            mask = random_block_mask(jax.random.PRNGKey(0), K // bk, N // bn,
-                                     density)
-    return pack(wm, mask, bk, bn), (kh, kw, cin, cout, 1)
+            mask = random_block_mask(jax.random.PRNGKey(0), Kb, Nb, density)
+    return pack(wm, mask, bk, bn)
+
+
+def pack_conv_weight(w, bk: int = 0, bn: int = 0, density: float = 1.0,
+                     mask=None):
+    """(kh, kw, Cin, Cout) -> BCSC over the im2col matrix (padded).
+
+    bk/bn == 0 => the mapper picks the sparse-format block granularity
+    (padding waste vs index overhead vs MXU tile quantum)."""
+    kh, kw, cin, cout = w.shape
+    wm = jnp.asarray(w).reshape(kh * kw * cin, cout)
+    sw = pack_dense_weight(wm, density=density, bk=bk, bn=bn, mask=mask)
+    return sw, (kh, kw, cin, cout, 1)
 
 
 def sparse_dense(x, sw: BlockSparseWeight, *, act_threshold=None,
-                 interpret: bool = True):
-    """Dense layer via the sparse kernels; x: (..., K)."""
+                 mapping: Mapping | None = None, interpret: bool = True):
+    """Dense layer via the sparse kernels; x: (..., K); mapper-scheduled."""
     lead = x.shape[:-1]
     xm = x.reshape(-1, x.shape[-1])
     xm = _pad_to(xm, sw.block[0], 1)
-    M = xm.shape[0]
-    bm = _largest_divisor(M, 128)
+    if mapping is None:
+        mapping = resolve_spmm_mapping(xm, sw)
     if act_threshold is not None:
         y = dual_sparse_matmul(xm, sw, act_threshold=float(act_threshold),
-                               bm=bm, interpret=interpret)
+                               mapping=mapping, interpret=interpret)
     else:
-        y = block_spmm(xm, sw, bm=bm, interpret=interpret)
+        y = block_spmm(xm, sw, mapping=mapping, interpret=interpret)
     return y.reshape(*lead, sw.shape[1])
 
 

@@ -1,0 +1,14 @@
+"""Dataflow-mapping & tile-autotuning subsystem.
+
+Picks kernel schedules (grid/block shapes, sparse-format granularity) from
+the same analytic perfmodel the repo calibrates against the paper's
+Table 3, optionally refined by on-device timing, and persists winners in a
+JSON cache keyed by (op, shape, dtype, sparsity).  See DESIGN.md §Mapper.
+"""
+from repro.mapper.cache import MappingCache, default_cache_path
+from repro.mapper.schema import Mapping, mapping_key
+from repro.mapper.search import (Mapper, default_mapper, set_default_mapper,
+                                 time_fn)
+
+__all__ = ["Mapping", "mapping_key", "MappingCache", "default_cache_path",
+           "Mapper", "default_mapper", "set_default_mapper", "time_fn"]

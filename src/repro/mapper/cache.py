@@ -1,0 +1,92 @@
+"""Persistent mapping cache: (op, shape, dtype, sparsity) -> winning Mapping.
+
+JSON on disk so tuned schedules survive the process (and can be committed
+per deployment, like a compiled autotuning database).  The in-memory dict
+is the trace-time hot path — ``layers.py`` / ``serve/engine.py`` resolve
+through it while building jitted programs, so lookups must be cheap and
+must never touch the filesystem after ``load()``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import warnings
+from typing import Optional
+
+from repro.mapper.schema import Mapping
+
+CACHE_ENV = "REPRO_MAPPING_CACHE"
+_FORMAT_VERSION = 1
+
+
+def default_cache_path() -> Optional[str]:
+    return os.environ.get(CACHE_ENV)
+
+
+class MappingCache:
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._entries: dict[str, Mapping] = {}
+        self.hits = 0
+        self.misses = 0
+        if path and os.path.exists(path):
+            # a cache is disposable: a corrupt/stale file must not take the
+            # process down at the first kernel call — start empty and warn
+            # (explicit load() still raises)
+            try:
+                self.load(path)
+            except (OSError, ValueError, KeyError, TypeError) as e:
+                warnings.warn(f"ignoring unreadable mapping cache {path}: {e}")
+                self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def get(self, key: str) -> Optional[Mapping]:
+        m = self._entries.get(key)
+        if m is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return m
+
+    def put(self, key: str, mapping: Mapping) -> None:
+        self._entries[key] = mapping
+
+    def load(self, path: Optional[str] = None) -> "MappingCache":
+        path = path or self.path
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("version") != _FORMAT_VERSION:
+            raise ValueError(f"mapping cache {path}: unknown version "
+                             f"{doc.get('version')!r}")
+        for key, md in doc["mappings"].items():
+            self._entries[key] = Mapping.from_json(md)
+        return self
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        assert path, "no cache path configured"
+        doc = {"version": _FORMAT_VERSION,
+               "mappings": {k: m.to_json()
+                            for k, m in sorted(self._entries.items())}}
+        # atomic replace: a crashed search never truncates the cache
+        d = os.path.dirname(os.path.abspath(path))
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return path
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses}

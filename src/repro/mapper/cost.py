@@ -1,0 +1,210 @@
+"""Generalized analytic cost model — the scoring half of the mapper.
+
+This is the *same* two-term decomposition `core/perfmodel.py` calibrates
+against the paper's Table 3 (processing ~ compute term, transmission ~
+stream term), lifted out so it can score TPU kernel schedules as well as
+FPGA fabric sizes:
+
+    time = max(compute_term, stream_term) + per-step overhead
+
+``compute_term``/``stream_term`` are the shared primitives (perfmodel now
+builds its proc/send times from them); ``score_matmul``/``score_attention``
+apply them to a ``Mapping`` using the TPU roofline constants from
+`core/roofline.py`.  Both are sparsity-aware: weight-block occupancy
+(``BlockSparseWeight.density``) scales the MACs *and* the weight stream —
+activation gating scales MACs only (the TPU-honest asymmetry, DESIGN.md).
+
+The stream term models the dataflow, not just footprint: with the kernels'
+(i, j, s) grids, x blocks are re-fetched once per output column tile and
+weight blocks once per output row tile, so
+
+    x traffic  ~ M*K*occ * (N/bn)        (bigger bn => fewer x re-streams)
+    w traffic  ~ K*N*occ * (M/bm)        (bigger bm => fewer w re-streams)
+
+which is exactly the tile-size/reuse trade-off Eyeriss-style mappers search.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.roofline import HBM_BW, PEAK_FLOPS
+from repro.mapper.schema import Mapping
+
+# Per-grid-step pipeline overhead (s).  Plays the role perfmodel's
+# PROC_OVERHEAD_NS plays for the FPGA: a floor that penalizes schedules
+# with many tiny tiles.  Order-of-magnitude for a Pallas grid step.
+STEP_OVERHEAD_S = 1e-6
+
+# Native tile quantum (f32); sublane requirement doubles for bf16 etc.
+LANE = 128
+SUBLANE = {"float32": 8, "bfloat16": 16, "int8": 32, "float8_e4m3fn": 32}
+
+VMEM_BYTES = 16 * 2 ** 20       # per-core VMEM (pallas_guide: ~16 MB)
+VMEM_BUDGET = VMEM_BYTES // 2   # leave headroom for double buffering
+
+DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "int8": 1, "float8_e4m3fn": 1}
+
+
+def dtype_name(dtype) -> str:
+    return getattr(dtype, "__name__", None) or getattr(dtype, "name", str(dtype))
+
+
+def sublane(dtype) -> int:
+    return SUBLANE.get(dtype_name(dtype), 8)
+
+
+def itemsize(dtype) -> int:
+    return DTYPE_BYTES.get(dtype_name(dtype), 4)
+
+
+# ------------------------------------------------------------ shared terms
+
+
+def compute_term(work: float, rate: float, overhead: float = 0.0) -> float:
+    """Time to issue ``work`` operations at ``rate`` ops/unit-time."""
+    return work / rate + overhead
+
+
+def stream_term(volume: float, bandwidth: float, base: float = 0.0) -> float:
+    """Time to move ``base + volume`` bytes at ``bandwidth`` bytes/unit-time."""
+    return (base + volume) / bandwidth
+
+
+def _align_util(tile: int, quantum: int) -> float:
+    """Fraction of a quantum-aligned tile that is useful work (1.0 when
+    aligned; ragged tiles pay for the padding the hardware processes)."""
+    if tile <= 0:
+        return 1e-9
+    return tile / (math.ceil(tile / quantum) * quantum)
+
+
+# ------------------------------------------------------------ matmul family
+
+
+def score_matmul(mapping: Mapping, M: int, K: int, N: int, dtype,
+                 *, occupancy: float = 1.0, act_occupancy: float = 1.0) -> float:
+    """Estimated seconds for x:(M,K) @ w:(K,N) under ``mapping``.
+
+    occupancy     : fraction of weight blocks present (scales MACs + w DMA)
+    act_occupancy : fraction of activation blocks live (scales MACs only —
+                    gating is evaluated after the x block is already in VMEM)
+    """
+    bm, bk, bn = mapping.bm, mapping.bk, mapping.bn
+    esize = itemsize(dtype)
+    sub = sublane(dtype)
+
+    mb = math.ceil(M / bm)
+    kb = math.ceil(K / bk)
+    nb = math.ceil(N / bn)
+
+    util = (_align_util(bm, sub) * _align_util(bk, LANE)
+            * _align_util(bn, LANE))
+    macs = 2.0 * M * K * N * occupancy * act_occupancy
+    t_compute = compute_term(macs, PEAK_FLOPS * util)
+
+    x_bytes = M * K * esize * occupancy * nb       # re-streamed per col tile
+    w_bytes = K * N * esize * occupancy * mb       # re-streamed per row tile
+    o_bytes = M * N * esize
+    t_stream = stream_term(x_bytes + w_bytes + o_bytes, HBM_BW)
+
+    steps = mb * nb * max(kb * occupancy, 1.0)
+    return max(t_compute, t_stream) + steps * STEP_OVERHEAD_S
+
+
+def matmul_vmem_bytes(mapping: Mapping, dtype) -> int:
+    """Resident VMEM for one grid step of the spmm/dense kernels:
+    x tile + w tile + out tile + f32 accumulator scratch."""
+    bm, bk, bn = mapping.bm, mapping.bk, mapping.bn
+    esize = itemsize(dtype)
+    return (bm * bk + bk * bn) * esize + bm * bn * esize + bm * bn * 4
+
+
+# ------------------------------------------------------------ attention
+
+
+def score_attention(mapping: Mapping, B: int, Sq: int, Skv: int, Hkv: int,
+                    G: int, D: int, dtype, *, causal: bool = True,
+                    window=None) -> float:
+    """Estimated seconds for blockwise/flash attention under ``mapping``."""
+    bq, bkv = mapping.bm, mapping.bk
+    esize = itemsize(dtype)
+
+    nq = math.ceil(Sq / bq)
+    nk = math.ceil(Skv / bkv)
+
+    # fraction of (q-block, kv-block) pairs inside the causal/window band
+    live = _band_fraction(Sq, Skv, bq, bkv, causal, window)
+
+    macs = 4.0 * B * Hkv * G * Sq * Skv * D * live       # qk^T and pv
+    util = _align_util(bq * G, sublane(dtype)) * _align_util(D, LANE)
+    t_compute = compute_term(macs, PEAK_FLOPS * util)
+
+    # q/o streamed once; k/v streamed once per live q block
+    q_bytes = 2.0 * B * Sq * Hkv * G * D * esize
+    kv_bytes = 2.0 * B * Skv * Hkv * D * esize * nq * live
+    t_stream = stream_term(q_bytes + kv_bytes, HBM_BW)
+
+    steps = B * Hkv * nq * nk
+    return max(t_compute, t_stream) + steps * STEP_OVERHEAD_S
+
+
+def attention_vmem_bytes(mapping: Mapping, G: int, D: int, dtype) -> int:
+    """Resident VMEM per grid step of flash attention: q/k/v tiles, the
+    score tile (the whole point: it never touches HBM), and m/l/acc
+    scratch."""
+    bq, bkv = mapping.bm, mapping.bk
+    esize = itemsize(dtype)
+    q = bq * G * D * esize
+    kv = 2 * bkv * D * esize
+    scores = bq * G * bkv * 4
+    scratch = bq * G * (D + 2) * 4
+    out = bq * G * D * esize
+    return q + kv + scores + scratch + out
+
+
+def _band_fraction(Sq: int, Skv: int, bq: int, bkv: int, causal: bool,
+                   window) -> float:
+    """Fraction of kv blocks each q block actually visits (block granular —
+    matches the kernels' ``@pl.when`` skip, not the element-level mask).
+
+    Closed form per q block: live kv blocks s satisfy
+      causal: s*bkv <= q0 + bq - 1          => s <= (q0 + bq - 1) // bkv
+      window: s*bkv + bkv - 1 > q0 - window => s >= ceil((q0-window-bkv+2)/bkv)
+    """
+    if not causal and window is None:
+        return 1.0
+    import numpy as np
+    nq = math.ceil(Sq / bq)
+    nk = math.ceil(Skv / bkv)
+    q0 = np.arange(nq, dtype=np.int64) * bq
+    hi = np.full(nq, nk - 1, np.int64)
+    if causal:
+        hi = np.minimum(hi, (q0 + bq - 1) // bkv)
+    lo = np.zeros(nq, np.int64)
+    if window is not None:
+        lo = np.maximum(lo, -(-(q0 - window - bkv + 2) // bkv))
+    live = np.maximum(0, hi - lo + 1).sum()
+    return float(live) / max(nq * nk, 1)
+
+
+# ------------------------------------------------------------ pack granularity
+
+
+def score_pack(wbk: int, wbn: int, K: int, N: int, dtype,
+               *, density: float = 1.0) -> float:
+    """Score a BCSC block granularity for a (K, N) weight: padding waste
+    plus index-table overhead, in streamed bytes (lower is better).
+
+    Coarse blocks waste padding on ragged K/N and lose sparsity resolution
+    (a block is kept if *any* element survives); fine blocks blow up the
+    index table and fall under the MXU tile quantum."""
+    esize = itemsize(dtype)
+    Kp = math.ceil(K / wbk) * wbk
+    Np = math.ceil(N / wbn) * wbn
+    pad_bytes = (Kp * Np - K * N) * esize * density
+    nblocks = (Kp // wbk) * (Np // wbn)
+    index_bytes = nblocks * 4
+    sub = sublane(dtype)
+    quant_penalty = (1.0 / (_align_util(wbk, sub) * _align_util(wbn, LANE))
+                     - 1.0) * K * N * esize * density
+    return pad_bytes + index_bytes + quant_penalty

@@ -1,0 +1,90 @@
+"""Mapping schema — the unit of exchange between the mapper and the kernels.
+
+A ``Mapping`` is one point in a kernel's schedule space: the grid tiling
+(block shapes per loop dimension), the contraction split, and — for the
+sparse kernels — the weight-format block granularity chosen at pack time.
+It is a frozen (hashable) dataclass so it can ride through ``jax.jit`` as a
+static argument: changing the mapping recompiles, exactly like re-sizing
+the OpenEye cluster array re-synthesizes the fabric.
+
+Field conventions per op class (see DESIGN.md §Mapper):
+
+  dense / spmm / conv (im2col matmul view, x:(M,K) @ w:(K,N)):
+      bm, bk, bn : grid tile edges along M / K / N
+      wbk, wbn   : sparse-format block granularity (BCSC pack time);
+                   for an already-packed weight these are fixed = sw.block
+      k_split    : contraction split factor (reserved; kernels currently
+                   accumulate the full K walk in one VMEM scratch, so the
+                   legal space enumerates k_split == 1 only)
+
+  attention (q:(B,Sq,Hq,D) vs kv:(B,Skv,Hkv,D)):
+      bm = block_q, bk = block_kv, bn = head_dim (informational)
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+OP_CLASSES = ("dense", "spmm", "conv", "attention")
+
+
+@dataclass(frozen=True, order=True)
+class Mapping:
+    op_class: str
+    bm: int = 0
+    bk: int = 0
+    bn: int = 0
+    k_split: int = 1
+    wbk: int = 0
+    wbn: int = 0
+
+    # ---- attention-flavoured aliases ----
+    @property
+    def block_q(self) -> int:
+        return self.bm
+
+    @property
+    def block_kv(self) -> int:
+        return self.bk
+
+    def grid(self, shape: tuple) -> tuple:
+        """Grid implied by this mapping for a problem ``shape``.
+
+        matmul-like: shape = (M, K, N) -> (M//bm, N//bn, K-walk length)
+        attention:   shape = (B, Sq, Skv, Hkv) -> (B, Hkv, Sq//bq, Skv//bkv)
+        """
+        if self.op_class == "attention":
+            B, Sq, Skv, Hkv = shape
+            return (B, Hkv, -(-Sq // self.bm), -(-Skv // self.bk))
+        M, K, N = shape
+        return (-(-M // self.bm), -(-N // self.bn),
+                self.k_split * -(-K // (self.bk * self.k_split)))
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Mapping":
+        return cls(**d)
+
+    def __post_init__(self):
+        if self.op_class not in OP_CLASSES:
+            raise ValueError(f"unknown op_class {self.op_class!r}")
+
+
+def mapping_key(op_class: str, shape: tuple, dtype, density: float = 1.0,
+                act_density: float = 1.0) -> str:
+    """Cache key: (op, shape, dtype, weight/activation sparsity buckets).
+
+    Densities are bucketed to 1/16 so nearby sparsity levels share a
+    schedule (occupancy shifts the stream term smoothly; re-searching per
+    exact nnz would fragment the cache for no win).  The activation bucket
+    is part of the key because it shifts the compute/stream balance the
+    scoring sees, even though gating never steers DMA.
+    """
+    def bucket(d: float) -> float:
+        return round(min(max(d, 0.0), 1.0) * 16) / 16
+    dname = getattr(dtype, "__name__", None) or getattr(dtype, "name", str(dtype))
+    key = f"{op_class}|{'x'.join(str(int(s)) for s in shape)}|{dname}|d{bucket(density):.4f}"
+    if act_density != 1.0:
+        key += f"|a{bucket(act_density):.4f}"
+    return key

@@ -1,0 +1,168 @@
+"""Mapping search: enumerate the legal space, score with the analytic cost
+model, optionally refine the top candidates with on-device timing, persist
+winners.
+
+``Mapper`` is the stateful front door; ``default_mapper()`` is the process
+singleton the kernels and layers resolve through at trace time.  Resolution
+is pure Python over static shapes, so it composes with ``jax.jit`` tracing
+(the chosen ``Mapping`` becomes a static argument of the kernel).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+from repro.mapper import cost as C
+from repro.mapper import space as S
+from repro.mapper.cache import MappingCache, default_cache_path
+from repro.mapper.schema import Mapping, mapping_key
+
+
+class Mapper:
+    def __init__(self, cache: Optional[MappingCache] = None, *,
+                 cache_path: Optional[str] = None,
+                 vmem_budget: int = C.VMEM_BUDGET,
+                 autosave: bool = False):
+        if cache is None:
+            cache = MappingCache(cache_path or default_cache_path())
+        self.cache = cache
+        self.vmem_budget = vmem_budget
+        self.autosave = autosave
+
+    # ------------------------------------------------------------ matmul
+
+    def matmul(self, M: int, K: int, N: int, dtype, *,
+               op_class: str = "spmm", wbk: int = 0, wbn: int = 0,
+               occupancy: float = 1.0, act_occupancy: float = 1.0,
+               refine: Optional[Callable[[Mapping], float]] = None) -> Mapping:
+        """Best mapping for x:(M,K) @ w:(K,N); wbk/wbn pin the K/N tiling
+        to an existing pack granularity."""
+        key = mapping_key(op_class, (M, K, N, wbk, wbn), dtype, occupancy,
+                          act_density=act_occupancy)
+        hit = self.cache.get(key)
+        if (hit is not None
+                and S.is_legal(hit, (M, K, N), dtype,
+                               vmem_budget=self.vmem_budget)
+                # a stale entry whose K/N tiles disagree with the requested
+                # pack granularity would trip the kernel assert — re-search
+                and (not wbk or hit.bk == wbk)
+                and (not wbn or hit.bn == wbn)):
+            return hit
+        cands = S.enumerate_matmul(M, K, N, dtype, op_class=op_class,
+                                   wbk=wbk, wbn=wbn,
+                                   vmem_budget=self.vmem_budget)
+        assert cands, f"empty mapping space for ({M},{K},{N}) {dtype}"
+        scored = sorted(cands, key=lambda m: C.score_matmul(
+            m, M, K, N, dtype, occupancy=occupancy,
+            act_occupancy=act_occupancy))
+        best = self._refine(scored, refine)
+        self._commit(key, best)
+        return best
+
+    # ------------------------------------------------------------ attention
+
+    def attention(self, B: int, Sq: int, Skv: int, Hkv: int, G: int, D: int,
+                  dtype, *, causal: bool = True, window=None,
+                  refine: Optional[Callable[[Mapping], float]] = None
+                  ) -> Mapping:
+        key = mapping_key(
+            "attention",
+            (B, Sq, Skv, Hkv, G, D, int(bool(causal)), window or 0), dtype)
+        hit = self.cache.get(key)
+        if hit is not None and S.is_legal(hit, (B, Sq, Skv, Hkv), dtype,
+                                          vmem_budget=self.vmem_budget,
+                                          G=G, D=D):
+            return hit
+        cands = S.enumerate_attention(B, Sq, Skv, Hkv, G, D, dtype,
+                                      vmem_budget=self.vmem_budget)
+        assert cands, f"empty attention mapping space Sq={Sq} Skv={Skv}"
+        scored = sorted(cands, key=lambda m: C.score_attention(
+            m, B, Sq, Skv, Hkv, G, D, dtype, causal=causal, window=window))
+        best = self._refine(scored, refine)
+        self._commit(key, best)
+        return best
+
+    # ------------------------------------------------------------ pack
+
+    def pack_granularity(self, K: int, N: int, dtype, *,
+                         density: float = 1.0) -> tuple[int, int]:
+        """BCSC block granularity for packing a (K, N) weight."""
+        key = mapping_key("spmm", (0, K, N), dtype, density)
+        hit = self.cache.get(key)
+        if hit is not None and hit.wbk > 0 and hit.wbn > 0:
+            return hit.wbk, hit.wbn
+        cands = S.enumerate_pack(K, N, dtype)
+        wbk, wbn = min(cands, key=lambda g: C.score_pack(
+            g[0], g[1], K, N, dtype, density=density))
+        self._commit(key, Mapping("spmm", wbk=wbk, wbn=wbn))
+        return wbk, wbn
+
+    # ------------------------------------------------------------ internals
+
+    def _refine(self, scored: list[Mapping],
+                refine: Optional[Callable[[Mapping], float]],
+                top_k: int = 4) -> Mapping:
+        """Re-rank the analytic top-k by measured time (when a timer is
+        supplied).  The analytic winner stays in the pool, so refinement
+        can only improve on it."""
+        if refine is None:
+            return scored[0]
+        pool = scored[:top_k]
+        return min(pool, key=refine)
+
+    def _commit(self, key: str, mapping: Mapping) -> None:
+        self.cache.put(key, mapping)
+        if self.autosave and self.cache.path:
+            self.cache.save()
+
+    # ------------------------------------------------------------ warm-up
+
+    def warm_attention_for(self, cfg, max_len: int, *, batch: int = 1) -> dict:
+        """Resolve the attention mappings a model config will request at
+        trace time (prefill/train block sizes per layer code), so jit
+        tracing hits the in-memory cache.  Returns {code: Mapping}."""
+        import jax.numpy as jnp
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        G = max(cfg.n_heads // cfg.n_kv_heads, 1)
+        out = {}
+        for code in set(cfg.layer_codes()):
+            window = cfg.sliding_window if code in ("L", "SM") else None
+            out[code] = self.attention(batch, max_len, max_len,
+                                       cfg.n_kv_heads, G, cfg.hd, dtype,
+                                       causal=True, window=window)
+        return out
+
+
+# ---------------------------------------------------------------- singleton
+
+_DEFAULT: Optional[Mapper] = None
+
+
+def default_mapper() -> Mapper:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Mapper()
+    return _DEFAULT
+
+
+def set_default_mapper(mapper: Optional[Mapper]) -> None:
+    global _DEFAULT
+    _DEFAULT = mapper
+
+
+# ---------------------------------------------------------------- timing
+
+
+def time_fn(fn: Callable[[], object], *, warmup: int = 1,
+            iters: int = 3) -> float:
+    """Median wall-clock seconds of ``fn`` (blocks on JAX arrays)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

@@ -1,0 +1,109 @@
+"""Legal mapping-space enumeration under TPU tiling constraints.
+
+Legality rules (DESIGN.md §Mapper):
+  * grid tiles must divide the (padded) problem dims — the kernels assert
+    divisibility rather than masking ragged edges;
+  * last-dim tiles should be lane multiples (128) and second-minor tiles
+    sublane multiples (8 for f32, 16 bf16, 32 int8).  For problem dims that
+    have no aligned divisor (e.g. im2col M = B*Ho*Wo), unaligned divisors
+    are admitted and the cost model charges the padding — legality never
+    strands a shape without a schedule;
+  * one grid step's resident VMEM (tiles + scratch) must fit the budget;
+  * k_split == 1 until the kernels grow a revisit-safe split accumulator
+    (the field is reserved in the schema).
+"""
+from __future__ import annotations
+
+import math
+
+from repro.mapper import cost as C
+from repro.mapper.schema import Mapping
+
+MAX_TILE = 2048
+
+
+def _divisors_up_to(n: int, cap: int) -> list[int]:
+    return [d for d in range(1, min(n, cap) + 1) if n % d == 0]
+
+
+def _tile_candidates(dim: int, quantum: int, cap: int = MAX_TILE) -> list[int]:
+    """Divisors of ``dim``, preferring quantum-aligned ones; all divisors
+    are legal (cost penalizes raggedness), but the enumeration is pruned to
+    aligned tiles plus the largest unaligned fallbacks to keep the space
+    small."""
+    divs = _divisors_up_to(dim, cap)
+    aligned = [d for d in divs if d % quantum == 0]
+    if aligned:
+        return aligned
+    # ragged dim (no aligned divisor): keep the few largest options
+    return sorted(divs)[-4:]
+
+
+def enumerate_matmul(M: int, K: int, N: int, dtype, *,
+                     op_class: str = "spmm", wbk: int = 0, wbn: int = 0,
+                     vmem_budget: int = C.VMEM_BUDGET) -> list[Mapping]:
+    """Legal (bm, bk, bn) mappings for x:(M,K) @ w:(K,N).
+
+    For packed sparse weights, bk/bn are pinned to the pack granularity
+    (wbk, wbn) — the K/N walk is the block-index walk; only bm is free.
+    """
+    sub = C.sublane(dtype)
+    bms = _tile_candidates(M, sub)
+    bks = [wbk] if wbk else _tile_candidates(K, C.LANE)
+    bns = [wbn] if wbn else _tile_candidates(N, C.LANE)
+    out = []
+    for bm in bms:
+        for bk in bks:
+            for bn in bns:
+                m = Mapping(op_class, bm=bm, bk=bk, bn=bn,
+                            wbk=wbk or bk, wbn=wbn or bn)
+                if C.matmul_vmem_bytes(m, dtype) <= vmem_budget:
+                    out.append(m)
+    return out
+
+
+def enumerate_attention(B: int, Sq: int, Skv: int, Hkv: int, G: int, D: int,
+                        dtype, *, vmem_budget: int = C.VMEM_BUDGET
+                        ) -> list[Mapping]:
+    """Legal (block_q, block_kv) mappings for blockwise/flash attention."""
+    sub = C.sublane(dtype)
+    # q tiles: sublane-aligned divisors of Sq (bq*G rows feed the MXU)
+    bqs = _tile_candidates(Sq, sub)
+    bkvs = _tile_candidates(Skv, C.LANE)
+    out = []
+    for bq in bqs:
+        for bkv in bkvs:
+            m = Mapping("attention", bm=bq, bk=bkv, bn=D)
+            if C.attention_vmem_bytes(m, G, D, dtype) <= vmem_budget:
+                out.append(m)
+    return out
+
+
+def enumerate_pack(K: int, N: int, dtype) -> list[tuple[int, int]]:
+    """Candidate BCSC block granularities for a (K, N) weight (pack time —
+    the weight is padded up to the granularity, so any quantum multiple is
+    legal)."""
+    sub = C.sublane(dtype)
+    wbks = sorted({q for q in (sub, 2 * sub, 4 * sub, 64, 128, 256)
+                   if q <= max(2 * K, sub)})
+    wbns = sorted({q for q in (32, 64, 128, 256) if q <= max(2 * N, 32)})
+    return [(bk, bn) for bk in wbks for bn in wbns]
+
+
+def is_legal(mapping: Mapping, shape: tuple, dtype, *,
+             vmem_budget: int = C.VMEM_BUDGET, G: int = 1, D: int = 0) -> bool:
+    """Validity check for an externally supplied mapping (cache entries,
+    hand-written configs)."""
+    if mapping.k_split != 1:
+        return False
+    if mapping.op_class == "attention":
+        B, Sq, Skv, Hkv = shape
+        return (mapping.bm > 0 and Sq % mapping.bm == 0
+                and mapping.bk > 0 and Skv % mapping.bk == 0
+                and C.attention_vmem_bytes(mapping, G, D or mapping.bn, dtype)
+                <= vmem_budget)
+    M, K, N = shape
+    return (mapping.bm > 0 and M % mapping.bm == 0
+            and mapping.bk > 0 and K % mapping.bk == 0
+            and mapping.bn > 0 and N % mapping.bn == 0
+            and C.matmul_vmem_bytes(mapping, dtype) <= vmem_budget)

@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.openeye_cnn import CNNConfig
-from repro.core.sparsity import magnitude_block_mask, pack
 from repro.kernels import ops as K
 
 
@@ -58,26 +57,26 @@ def op_count(cfg: CNNConfig) -> int:
     return total
 
 
-def pack_cnn(params, cfg: CNNConfig, *, density: float = 1.0, bk=128, bn=32):
-    """Offline prune+pack of all conv/dense weights into BCSC."""
+def pack_cnn(params, cfg: CNNConfig, *, density: float = 1.0, bk=0, bn=0):
+    """Offline prune+pack of all conv/dense weights into BCSC.
+
+    bk/bn == 0 => the mapper picks each layer's sparse-format block
+    granularity (per weight shape — the paper's per-layer fabric re-sizing,
+    applied to the storage format)."""
     packed = []
     for p, layer in zip(params, cfg.layers):
         if layer.kind == "conv":
-            w = p["w"]
-            kh, kw, cin, cout = w.shape
-            wm = w.reshape(kh * kw * cin, cout)
-            wm = K._pad_to(K._pad_to(wm, bk, 0), bn, 1)
-            mask = (magnitude_block_mask(wm, bk, bn, density)
-                    if density < 1.0 else jnp.ones(
-                        (wm.shape[0] // bk, wm.shape[1] // bn), bool))
-            packed.append({"sw": pack(wm, mask, bk, bn),
+            kh, kw, cin, cout = p["w"].shape
+            wm = p["w"].reshape(kh * kw * cin, cout)
+            packed.append({"sw": K.pack_dense_weight(
+                               wm, density=density, bk=bk, bn=bn,
+                               magnitude=True),
                            "meta": (kh, kw, cin, cout, 1)})
         elif layer.kind == "dense":
-            wm = K._pad_to(K._pad_to(p["w"], bk, 0), bn, 1)
-            mask = (magnitude_block_mask(wm, bk, bn, density)
-                    if density < 1.0 else jnp.ones(
-                        (wm.shape[0] // bk, wm.shape[1] // bn), bool))
-            packed.append({"sw": pack(wm, mask, bk, bn), "meta": None})
+            packed.append({"sw": K.pack_dense_weight(
+                               p["w"], density=density, bk=bk, bn=bn,
+                               magnitude=True),
+                           "meta": None})
         else:
             packed.append({})
     return packed

@@ -93,17 +93,32 @@ def _gqa_scores(q, k):
     return jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
 
 
-def attention_full_blockwise(q, k, v, *, q_offset, causal=True, block_kv=1024,
+def _resolve_attn_blocks(q, k, *, causal, window):
+    """Trace-time mapper resolution of (block_q, block_kv) for the pure-JAX
+    blockwise attention paths (shapes are static while tracing; repeated
+    traces hit the mapper's in-memory cache)."""
+    from repro.mapper.search import default_mapper
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    m = default_mapper().attention(B, Sq, Sk, Hkv, max(Hq // Hkv, 1), D,
+                                   q.dtype, causal=causal, window=window)
+    return m.block_q, m.block_kv
+
+
+def attention_full_blockwise(q, k, v, *, q_offset, causal=True, block_kv=None,
                              window=None, scores_dtype=jnp.float32):
     """Online-softmax attention scanning over KV blocks.
 
     q: (B, Sq, Hq, D), k/v: (B, Sk, Hkv, D). q position i has absolute
     position q_offset + i; kv position j is absolute j. Memory per step is
-    O(Sq * block_kv) instead of O(Sq * Sk).
+    O(Sq * block_kv) instead of O(Sq * Sk).  block_kv=None => the mapper
+    picks it from the analytic cost model (cached per shape).
     """
     B, Sq, Hq, D = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv
+    if block_kv is None:
+        _, block_kv = _resolve_attn_blocks(q, k, causal=causal, window=window)
     qg = q.reshape(B, Sq, Hkv, G, D)
     scale = 1.0 / math.sqrt(D)
 
@@ -149,17 +164,19 @@ def attention_full_blockwise(q, k, v, *, q_offset, causal=True, block_kv=1024,
     return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D).astype(q.dtype)
 
 
-def attention_banded(q, k, v, *, window, q_offset=0, block_q=512):
+def attention_banded(q, k, v, *, window, q_offset=0, block_q=None):
     """Sliding-window causal attention touching only the KV band.
 
     Compute & memory are O(Sq * (window + block_q)) — sub-quadratic for
     window << Sk. Band per q block i: kv positions
-    [i*bq - window + 1, i*bq + bq).
+    [i*bq - window + 1, i*bq + bq).  block_q=None => mapper-resolved.
     """
     B, Sq, Hq, D = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv
     scale = 1.0 / math.sqrt(D)
+    if block_q is None:
+        block_q, _ = _resolve_attn_blocks(q, k, causal=True, window=window)
     block_q = min(block_q, Sq)
     nqb = Sq // block_q
     band = window + block_q   # static band length

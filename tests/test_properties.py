@@ -1,0 +1,55 @@
+"""Hypothesis property tests for the sparse-format invariants.
+
+Kept in their own module so the rest of the suite runs when the optional
+``hypothesis`` dev dependency is absent (pyproject `[dev]` extra)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.sparsity import (apply_mask, nm_prune, pack,  # noqa: E402
+                                 random_block_mask, unpack)
+
+
+@settings(max_examples=15, deadline=None)
+@given(kb=st.integers(1, 4), nb=st.integers(1, 3),
+       density=st.floats(0.1, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(kb, nb, density, seed):
+    bk = bn = 8
+    K, N = kb * bk, nb * bn
+    w = jax.random.normal(jax.random.PRNGKey(seed % 997), (K, N), jnp.float32)
+    mask = random_block_mask(jax.random.PRNGKey(seed % 991), kb, nb, density)
+    sw = pack(w, mask, bk, bn)
+    dense = unpack(sw)
+    expect = apply_mask(w, mask, bk, bn)
+    assert bool(jnp.array_equal(dense, expect))
+    # idx entries within range, padding is -1
+    idx = np.asarray(sw.idx)
+    assert ((idx >= -1) & (idx < kb)).all()
+    nnz = np.asarray(sw.nnz)
+    assert ((idx >= 0).sum(axis=1) == nnz).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 4), groups=st.integers(1, 8),
+       cols=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_nm_prune_invariant(n, groups, cols, seed):
+    m = 4
+    n = min(n, m)
+    w = jax.random.normal(jax.random.PRNGKey(seed % 997),
+                          (groups * m, cols), jnp.float32)
+    pruned = nm_prune(w, n=n, m=m)
+    nz = (np.asarray(pruned).reshape(groups, m, cols) != 0).sum(axis=1)
+    assert (nz <= n).all()
+    # surviving entries are the largest-|.| ones
+    g = np.abs(np.asarray(w).reshape(groups, m, cols))
+    kept = np.abs(np.asarray(pruned).reshape(groups, m, cols)) > 0
+    for gi in range(groups):
+        for c in range(cols):
+            if kept[gi, :, c].sum() == n:
+                thresh = np.sort(g[gi, :, c])[-n]
+                assert (g[gi, kept[gi, :, c], c] >= thresh - 1e-6).all()
