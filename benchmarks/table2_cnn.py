@@ -49,6 +49,12 @@ def run(csv_rows: list) -> None:
     us_sparse5 = (time.perf_counter() - t0) * 1e6
     assert bool(jnp.isfinite(out5).all())
 
+    print("# compacted schedule at density=0.5 "
+          "(slots vs legacy padded Nb*max_nnz):")
+    for r in cnn.schedule_report(packed5, CNN):
+        print(f"#   layer {r['layer']} ({r['kind']}): nnz={r['nnz_blocks']} "
+              f"slots={r['slots']} padded={r['padded_slots']}")
+
     print(f"# dense {us_dense:.0f}us | kernel(d=1.0) {us_sparse:.0f}us "
           f"(rel err {err:.1e}) | kernel(d=0.5) {us_sparse5:.0f}us "
           f"(interpret mode — correctness path, not TPU timing)")

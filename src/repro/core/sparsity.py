@@ -4,12 +4,20 @@ The FPGA design stores CSC address/data RAMs per PE and skips zero entries
 element-wise.  A TPU MXU cannot profit from element-granular zeros, so the
 framework works at *block* granularity (multiples of the native 8x128 tile):
 
-  * ``BlockSparseWeight``: packed nonzero blocks + per-column block index
-    lists (BCSC — "address RAM" = the index table, "data RAM" = the packed
-    blocks).  Consumed by the Pallas ``block_spmm`` kernel via scalar
-    prefetch.
+  * ``BlockSparseWeight``: a *compacted* BCSC layout.  Nonzero blocks are
+    packed flat in column-major order ("data RAM"); a per-slot K-block
+    index plus per-column offsets (CSC row pointers — the "address RAM")
+    are scalar-prefetched by the Pallas kernels, whose sparse grid
+    dimension walks the slots directly.  Kernel work is therefore
+    proportional to sum(nnz), not to Nb * max(nnz) as a padded slot layout
+    would be (see DESIGN.md §Compacted address RAM).
   * N:M structured sparsity is supported at the format level (prune /
     encode / decode round-trip) and executes through the block path.
+
+Empty columns (nnz == 0) carry one sentinel slot (``idx == -1``, zero
+block) so every output column still gets its accumulator init + flush;
+the schedule length is ``sum(max(nnz_j, 1))`` — within one step per empty
+column of the nnz-proportional ideal.
 """
 from __future__ import annotations
 
@@ -24,15 +32,21 @@ import numpy as np
 @jax.tree_util.register_dataclass
 @dataclass
 class BlockSparseWeight:
-    """W (K, N) with (bk, bn) blocks; only nonzero blocks stored.
+    """W (K, N) with (bk, bn) blocks; only nonzero blocks stored (compacted).
 
-    blocks : (Nb, max_nnz, bk, bn)  packed values ("data RAM")
-    idx    : (Nb, max_nnz) int32    K-block index per slot, -1 = padding
-    nnz    : (Nb,) int32            active slots per N-block column
-    shape  : (K, N) dense shape
+    blocks  : (S, bk, bn)   flat packed values ("data RAM"), column-major
+    idx     : (S,) int32    K-block index per slot, -1 = empty-column sentinel
+    col_id  : (S,) int32    N-block column per slot (nondecreasing)
+    offsets : (Nb+1,) int32 CSC "address RAM": column j owns slots
+                            [offsets[j], offsets[j+1])
+    nnz     : (Nb,) int32   true nonzero blocks per column (sentinels excluded)
+    shape   : (K, N) dense shape
+    block   : (bk, bn) block granularity
     """
     blocks: jax.Array
     idx: jax.Array
+    col_id: jax.Array
+    offsets: jax.Array
     nnz: jax.Array
     shape: tuple = dataclasses.field(metadata=dict(static=True))
     block: tuple = dataclasses.field(metadata=dict(static=True))
@@ -40,14 +54,36 @@ class BlockSparseWeight:
     @property
     def density(self) -> float:
         Kb = self.shape[0] // self.block[0]
-        return float(np.asarray(self.nnz).sum()) / (Kb * self.idx.shape[0])
+        return float(np.asarray(self.nnz).sum()) / (Kb * self.nnz.shape[0])
+
+    @property
+    def nnz_blocks(self) -> int:
+        """Total stored nonzero blocks, sum(nnz) — the work ideal."""
+        return int(np.asarray(self.nnz).sum())
+
+    @property
+    def num_slots(self) -> int:
+        """Compacted schedule length S = sum(max(nnz_j, 1)): one grid step
+        per stored block plus one sentinel per empty column."""
+        return int(self.idx.shape[0])
+
+    @property
+    def max_nnz(self) -> int:
+        return max(int(np.asarray(self.nnz).max()), 1)
+
+    @property
+    def padded_slots(self) -> int:
+        """Schedule length of the legacy padded (Nb, max_nnz) layout — what
+        every column used to pay regardless of its own occupancy."""
+        return self.nnz.shape[0] * self.max_nnz
 
 
 def random_block_mask(key, Kb: int, Nb: int, density: float):
     """Random block-occupancy bitmap with >=1 block per column."""
-    m = jax.random.uniform(key, (Kb, Nb)) < density
+    ku, kf = jax.random.split(key)
+    m = jax.random.uniform(ku, (Kb, Nb)) < density
     # guarantee at least one block per column (keeps matmul well-defined)
-    force = jax.nn.one_hot(jax.random.randint(key, (Nb,), 0, Kb), Kb,
+    force = jax.nn.one_hot(jax.random.randint(kf, (Nb,), 0, Kb), Kb,
                            dtype=bool).T
     return m | force
 
@@ -63,39 +99,46 @@ def magnitude_block_mask(w, bk: int, bn: int, density: float):
 
 
 def pack(w, mask, bk: int, bn: int) -> BlockSparseWeight:
-    """Dense (K, N) + block mask (Kb, Nb) -> packed BCSC (host-side)."""
+    """Dense (K, N) + block mask (Kb, Nb) -> compacted BCSC (host-side,
+    fully vectorized — no per-slot Python loops)."""
     w = np.asarray(w)
-    mask = np.asarray(mask)
+    mask = np.asarray(mask, bool)
     K, N = w.shape
     Kb, Nb = K // bk, N // bn
     assert mask.shape == (Kb, Nb)
-    nnz = mask.sum(axis=0)
-    max_nnz = max(int(nnz.max()), 1)
-    blocks = np.zeros((Nb, max_nnz, bk, bn), w.dtype)
-    idx = np.full((Nb, max_nnz), -1, np.int32)
-    for j in range(Nb):
-        ks = np.nonzero(mask[:, j])[0]
-        for s, kb in enumerate(ks):
-            blocks[j, s] = w[kb * bk:(kb + 1) * bk, j * bn:(j + 1) * bn]
-            idx[j, s] = kb
+    nnz = mask.sum(axis=0).astype(np.int64)                  # (Nb,)
+    slot_counts = np.maximum(nnz, 1)                         # sentinel slots
+    offsets = np.concatenate([[0], np.cumsum(slot_counts)]).astype(np.int32)
+    S = int(offsets[-1])
+    col_id = np.repeat(np.arange(Nb, dtype=np.int32), slot_counts)
+    idx = np.full(S, -1, np.int32)
+    blocks = np.zeros((S, bk, bn), w.dtype)
+    cj, ck = np.nonzero(mask.T)             # column-major (CSC) order
+    if cj.size:
+        first_of_col = np.concatenate([[0], np.cumsum(nnz)])[:-1]
+        rank = np.arange(cj.size) - first_of_col[cj]         # rank in column
+        slots = offsets[:-1][cj] + rank
+        idx[slots] = ck.astype(np.int32)
+        wr = w.reshape(Kb, bk, Nb, bn).transpose(0, 2, 1, 3)  # (Kb, Nb, bk, bn)
+        blocks[slots] = wr[ck, cj]
     return BlockSparseWeight(jnp.asarray(blocks), jnp.asarray(idx),
-                             jnp.asarray(nnz.astype(np.int32)), (K, N), (bk, bn))
+                             jnp.asarray(col_id), jnp.asarray(offsets),
+                             jnp.asarray(nnz.astype(np.int32)),
+                             (K, N), (bk, bn))
 
 
 def unpack(sw: BlockSparseWeight) -> jax.Array:
-    """Packed -> dense (for oracles / round-trip tests)."""
+    """Packed -> dense (for oracles / round-trip tests); vectorized."""
     K, N = sw.shape
     bk, bn = sw.block
-    Nb, max_nnz = sw.idx.shape
-    w = np.zeros((K, N), np.asarray(sw.blocks).dtype)
+    Kb, Nb = K // bk, N // bn
     idx = np.asarray(sw.idx)
+    col = np.asarray(sw.col_id)
     blocks = np.asarray(sw.blocks)
-    for j in range(Nb):
-        for s in range(max_nnz):
-            kb = idx[j, s]
-            if kb >= 0:
-                w[kb * bk:(kb + 1) * bk, j * bn:(j + 1) * bn] = blocks[j, s]
-    return jnp.asarray(w)
+    wr = np.zeros((Kb, Nb, bk, bn), blocks.dtype)
+    live = idx >= 0
+    wr[idx[live], col[live]] = blocks[live]
+    return jnp.asarray(wr.transpose(0, 2, 1, 3).reshape(K, N))
 
 
 # ------------------------------------------------------------------ N:M

@@ -1,19 +1,22 @@
-"""Pallas TPU kernel: dense activations x block-sparse weights (BCSC).
+"""Pallas TPU kernel: dense activations x block-sparse weights (compacted
+BCSC).
 
 The TPU-native adaptation of OpenEye's sparse PE datapath:
-  * the per-column block index table (the "address RAM") is *scalar
-    prefetched* so the grid only visits nonzero blocks — zero blocks cost
-    neither FLOPs nor HBM->VMEM DMA, the same two savings the FPGA design
-    gets from its CSC encoding;
-  * the VMEM f32 scratch accumulator revisited along the sparse-K grid
-    dimension is the "PSUM RAM" (the LVT multi-port trick has no TPU
-    analogue — VMEM is software-scheduled; see DESIGN.md);
+  * the CSC "address RAM" — per-slot K-block indices, per-slot column ids,
+    and per-column offsets (row pointers) — is *scalar prefetched*, and the
+    sparse grid dimension walks the packed slots directly: the grid is
+    (M/bm, S) with S = sum(max(nnz_j, 1)), so work and weight DMA are
+    proportional to the actual nonzeros, never to Nb * max(nnz) as the
+    legacy padded slot layout paid (see DESIGN.md §Compacted address RAM);
+  * the VMEM f32 scratch accumulator is initialized at each column's first
+    slot and flushed at its last (column boundaries come from the offset
+    table), playing the role of the FPGA's PSUM RAM;
   * the schedule (row-tile bm; bk/bn pinned to the pack granularity) comes
     from a ``Mapping`` picked by the mapper subsystem — no hardcoded tile
     constants; pass ``mapping=None`` to resolve through the default
     mapper's cost model + cache.
 
-y[i, j] = sum_s x[i, idx[j, s]] @ blocks[j, s]      (s < nnz[j])
+y[i, j] = sum_{s in [offsets[j], offsets[j+1])} x[i, idx[s]] @ blocks[s]
 """
 from __future__ import annotations
 
@@ -33,31 +36,39 @@ from repro.mapper.schema import Mapping
 def resolve_spmm_mapping(x, sw: BlockSparseWeight, *,
                          act_occupancy: float = 1.0) -> Mapping:
     """Mapper resolution for this kernel: bk/bn are the weight's pack
-    granularity; bm is searched under tiling/VMEM legality."""
+    granularity; bm is searched under tiling/VMEM legality.  The true
+    compacted schedule (nnz blocks / slot count) feeds the cost model so
+    scoring is nnz-proportional, not mean-occupancy-derived."""
     from repro.mapper.search import default_mapper
     M, K = x.shape
     bk, bn = sw.block
     return default_mapper().matmul(M, K, sw.shape[1], x.dtype, op_class="spmm",
                                    wbk=bk, wbn=bn, occupancy=sw.density,
-                                   act_occupancy=act_occupancy)
+                                   act_occupancy=act_occupancy,
+                                   nnz_blocks=sw.nnz_blocks,
+                                   sched_slots=sw.num_slots)
 
 
-def _kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, max_nnz: int):
-    j = pl.program_id(1)
-    s = pl.program_id(2)
+def _kernel(idx_ref, col_ref, off_ref, x_ref, w_ref, o_ref, acc_ref):
+    s = pl.program_id(1)
+    j = col_ref[s]
 
-    @pl.when(s == 0)
+    # accumulator init/flush at *column boundaries* (the offset table is the
+    # CSC address RAM) — a column with one slot inits and flushes in the
+    # same step; short columns never pay padded steps.
+    @pl.when(s == off_ref[j])
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # padded slots (idx < 0) are skipped: no MACs issued (the Cnvlutin-style
-    # compute gate); their DMA is aliased to block 0 by the index_map.
-    @pl.when(idx_ref[j, s] >= 0)
+    # sentinel slots (idx < 0, one per empty column) skip their MACs; every
+    # real slot is a stored nonzero block, so no Cnvlutin-style gate is
+    # needed on the compacted walk.
+    @pl.when(idx_ref[s] >= 0)
     def _mac():
-        acc_ref[...] += jnp.dot(x_ref[...], w_ref[0, 0],
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
                                 preferred_element_type=jnp.float32)
 
-    @pl.when(s == max_nnz - 1)
+    @pl.when(s + 1 == off_ref[j + 1])
     def _store():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
@@ -77,39 +88,37 @@ def _block_spmm(x, sw: BlockSparseWeight, *, mapping: Mapping,
     Kn, N = sw.shape
     assert K == Kn, (x.shape, sw.shape)
     bk, bn = sw.block
-    Nb, max_nnz = sw.idx.shape
+    S = sw.idx.shape[0]
     bm = min(mapping.bm, M)
     assert (mapping.bk, mapping.bn) == (bk, bn), \
         f"mapping K/N tiles {mapping.bk, mapping.bn} != pack granularity {sw.block}"
     assert M % bm == 0 and K % bk == 0 and N % bn == 0
 
-    grid = (M // bm, Nb, max_nnz)
+    grid = (M // bm, S)
 
-    def x_map(i, j, s, idx_ref):
-        kb = idx_ref[j, s]
-        return (i, jnp.maximum(kb, 0))          # alias padded slots to block 0
+    def x_map(i, s, idx_ref, col_ref, off_ref):
+        return (i, jnp.maximum(idx_ref[s], 0))   # sentinel aliases K-block 0
 
-    def w_map(i, j, s, idx_ref):
-        return (j, s, 0, 0)
+    def w_map(i, s, idx_ref, col_ref, off_ref):
+        return (s, 0, 0)
 
-    def o_map(i, j, s, idx_ref):
-        return (i, j)
+    def o_map(i, s, idx_ref, col_ref, off_ref):
+        return (i, col_ref[s])
 
-    kernel = functools.partial(_kernel, max_nnz=max_nnz)
     return pl.pallas_call(
-        kernel,
+        _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=3,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((bm, bk), x_map),
-                pl.BlockSpec((1, 1, bk, bn), w_map),
+                pl.BlockSpec((1, bk, bn), w_map),
             ],
             out_specs=pl.BlockSpec((bm, bn), o_map),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(sw.idx, x, sw.blocks)
+    )(sw.idx, sw.col_id, sw.offsets, x, sw.blocks)

@@ -1,17 +1,18 @@
 """Pallas TPU kernel: dual sparsity — block-sparse weights AND runtime
 activation-block gating (the full OpenEye PE datapath).
 
-Weights are compressed offline (BCSC, scalar-prefetched indices: no FLOPs,
-no DMA for zero weight blocks).  Activations are gated at *runtime*: the
-wrapper computes a per-(row-block, K-block) occupancy bitmap (max-|x| over
-the block vs a threshold); the kernel skips the MACs of gated blocks with
-``@pl.when``.
+Weights are compressed offline into the *compacted* BCSC layout (flat
+packed slots + scalar-prefetched CSC address RAM: no FLOPs, no DMA, and —
+since the grid walks the slots — no grid steps for zero weight blocks).
+Activations are gated at *runtime*: the wrapper computes a per-(row-block,
+K-block) occupancy bitmap (max-|x| over the block vs a threshold); the
+kernel skips the MACs of gated blocks with ``@pl.when``.
 
 TPU-honest asymmetry (documented in DESIGN.md): dynamic activation sparsity
 cannot steer DMA — the x block is already in VMEM when the gate is
 evaluated — so activation gating saves *compute only*, while weight sparsity
-saves compute *and* memory traffic.  This mirrors the paper's own
-distinction between skipped MACs and still-streamed data.
+saves compute, memory traffic, AND grid steps.  This mirrors the paper's
+own distinction between skipped MACs and still-streamed data.
 """
 from __future__ import annotations
 
@@ -29,23 +30,24 @@ from repro.kernels.block_spmm import resolve_spmm_mapping
 from repro.mapper.schema import Mapping
 
 
-def _kernel(idx_ref, gate_ref, x_ref, w_ref, o_ref, acc_ref, *, max_nnz: int):
+def _kernel(idx_ref, col_ref, off_ref, gate_ref, x_ref, w_ref, o_ref,
+            acc_ref):
     i = pl.program_id(0)
-    j = pl.program_id(1)
-    s = pl.program_id(2)
+    s = pl.program_id(1)
+    j = col_ref[s]
 
-    @pl.when(s == 0)
+    @pl.when(s == off_ref[j])
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    kb = idx_ref[j, s]
+    kb = idx_ref[s]
 
     @pl.when((kb >= 0) & (gate_ref[i, jnp.maximum(kb, 0)] > 0))
     def _mac():
-        acc_ref[...] += jnp.dot(x_ref[...], w_ref[0, 0],
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
                                 preferred_element_type=jnp.float32)
 
-    @pl.when(s == max_nnz - 1)
+    @pl.when(s + 1 == off_ref[j + 1])
     def _store():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
@@ -68,7 +70,7 @@ def _dual_sparse_matmul(x, sw: BlockSparseWeight, *, act_threshold: float,
                         mapping: Mapping, interpret: bool):
     M, K = x.shape
     bk, bn = sw.block
-    Nb, max_nnz = sw.idx.shape
+    S = sw.idx.shape[0]
     bm = min(mapping.bm, M)
     assert (mapping.bk, mapping.bn) == (bk, bn), \
         f"mapping K/N tiles {mapping.bk, mapping.bn} != pack granularity {sw.block}"
@@ -82,32 +84,31 @@ def _dual_sparse_matmul(x, sw: BlockSparseWeight, *, act_threshold: float,
     xg = (x.reshape(Mb, bm, Kb, bk) *
           gate[:, None, :, None].astype(x.dtype)).reshape(M, K)
 
-    grid = (Mb, Nb, max_nnz)
+    grid = (Mb, S)
 
-    def x_map(i, j, s, idx_ref, gate_ref):
-        return (i, jnp.maximum(idx_ref[j, s], 0))
+    def x_map(i, s, idx_ref, col_ref, off_ref, gate_ref):
+        return (i, jnp.maximum(idx_ref[s], 0))
 
-    def w_map(i, j, s, idx_ref, gate_ref):
-        return (j, s, 0, 0)
+    def w_map(i, s, idx_ref, col_ref, off_ref, gate_ref):
+        return (s, 0, 0)
 
-    def o_map(i, j, s, idx_ref, gate_ref):
-        return (i, j)
+    def o_map(i, s, idx_ref, col_ref, off_ref, gate_ref):
+        return (i, col_ref[s])
 
-    kernel = functools.partial(_kernel, max_nnz=max_nnz)
     return pl.pallas_call(
-        kernel,
+        _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=4,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((bm, bk), x_map),
-                pl.BlockSpec((1, 1, bk, bn), w_map),
+                pl.BlockSpec((1, bk, bn), w_map),
             ],
             out_specs=pl.BlockSpec((bm, bn), o_map),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((M, sw.shape[1]), x.dtype),
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(sw.idx, gate, xg, sw.blocks)
+    )(sw.idx, sw.col_id, sw.offsets, gate, xg, sw.blocks)

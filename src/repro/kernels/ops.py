@@ -19,7 +19,25 @@ from repro.kernels.dual_sparse import dual_sparse_matmul
 from repro.mapper.schema import Mapping
 
 __all__ = ["block_spmm", "dual_sparse_matmul", "decode_attention",
-           "sparse_conv2d", "im2col", "sparse_dense", "pack_dense_weight"]
+           "sparse_conv2d", "im2col", "sparse_dense", "pack_dense_weight",
+           "spmm_schedule_stats"]
+
+
+def spmm_schedule_stats(M: int, sw: BlockSparseWeight, *,
+                        dtype=jnp.float32, act_occupancy: float = 1.0,
+                        mapping: Mapping | None = None):
+    """Schedule counters for x:(M,K) @ ``sw`` under the mapper-resolved (or
+    supplied) row tile: compacted grid steps / weight-DMA bytes vs the
+    legacy padded layout vs the sum(nnz) ideal (see ref.spmm_schedule_ref).
+    Resolution goes through ``resolve_spmm_mapping`` (shape/dtype only), so
+    the counters describe the same bm the kernel would execute with.
+    """
+    from repro.kernels.ref import spmm_schedule_ref
+    if mapping is None:
+        x_spec = jax.ShapeDtypeStruct((M, sw.shape[0]), dtype)
+        mapping = resolve_spmm_mapping(x_spec, sw,
+                                       act_occupancy=act_occupancy)
+    return spmm_schedule_ref(sw, M, mapping.bm)
 
 
 def im2col(x, kh: int, kw: int, *, stride: int = 1):

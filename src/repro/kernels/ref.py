@@ -13,6 +13,33 @@ def block_spmm_ref(x, sw: BlockSparseWeight):
     return jnp.asarray(x) @ w.astype(x.dtype)
 
 
+def spmm_schedule_ref(sw: BlockSparseWeight, M: int, bm: int) -> dict:
+    """Schedule-counter oracle for the sparse kernels: grid steps and
+    weight-DMA bytes of the compacted slot walk vs the legacy padded
+    (Nb, max_nnz) layout vs the sum(nnz)-proportional ideal.
+
+    The compacted kernels issue exactly one grid step (and one (bk, bn)
+    weight-block DMA) per slot per row tile; the padded layout paid
+    Nb * max(nnz) everywhere, sentinel DMAs aliased to block 0 included.
+    """
+    bk, bn = sw.block
+    esize = jnp.dtype(sw.blocks.dtype).itemsize
+    mb = -(-M // min(bm, M))
+    block_bytes = bk * bn * esize
+    ideal = sw.nnz_blocks            # sum(nnz): the paper's "no unnecessary
+    compacted = sw.num_slots         # computations" target
+    padded = sw.padded_slots
+    return {
+        "row_tiles": mb,
+        "ideal_steps": mb * ideal,
+        "compacted_steps": mb * compacted,
+        "padded_steps": mb * padded,
+        "ideal_w_bytes": mb * ideal * block_bytes,
+        "compacted_w_bytes": mb * compacted * block_bytes,
+        "padded_w_bytes": mb * padded * block_bytes,
+    }
+
+
 def masked_matmul_ref(x, w, mask, bk: int, bn: int):
     """x @ (w masked at block granularity)."""
     return x @ apply_mask(w, mask, bk, bn).astype(x.dtype)

@@ -15,13 +15,16 @@ apply them to a ``Mapping`` using the TPU roofline constants from
 activation gating scales MACs only (the TPU-honest asymmetry, DESIGN.md).
 
 The stream term models the dataflow, not just footprint: with the kernels'
-(i, j, s) grids, x blocks are re-fetched once per output column tile and
-weight blocks once per output row tile, so
+compacted (i, s) grids (s walks the packed BCSC slots), x blocks are
+fetched once per slot and weight blocks once per slot per output row tile,
+so with S = sum(max(nnz_j, 1)) compacted slots:
 
-    x traffic  ~ M*K*occ * (N/bn)        (bigger bn => fewer x re-streams)
-    w traffic  ~ K*N*occ * (M/bm)        (bigger bm => fewer w re-streams)
+    x traffic  ~ M*bk * S                (slot walk re-streams x per column)
+    w traffic  ~ bk*bn * S * (M/bm)      (bigger bm => fewer w re-streams)
 
-which is exactly the tile-size/reuse trade-off Eyeriss-style mappers search.
+which is exactly the tile-size/reuse trade-off Eyeriss-style mappers
+search — and both terms are linear in the true nonzero count, never in
+Nb * max(nnz) (Eyeriss v2's hierarchical-CSC property, see DESIGN.md).
 """
 from __future__ import annotations
 
@@ -82,12 +85,24 @@ def _align_util(tile: int, quantum: int) -> float:
 
 
 def score_matmul(mapping: Mapping, M: int, K: int, N: int, dtype,
-                 *, occupancy: float = 1.0, act_occupancy: float = 1.0) -> float:
+                 *, occupancy: float = 1.0, act_occupancy: float = 1.0,
+                 nnz_blocks: float | None = None,
+                 sched_slots: float | None = None) -> float:
     """Estimated seconds for x:(M,K) @ w:(K,N) under ``mapping``.
 
     occupancy     : fraction of weight blocks present (scales MACs + w DMA)
     act_occupancy : fraction of activation blocks live (scales MACs only —
                     gating is evaluated after the x block is already in VMEM)
+    nnz_blocks    : true stored nonzero (bk, bn) weight blocks, sum(nnz) —
+                    supplied by a packed ``BlockSparseWeight`` so compute /
+                    stream are exactly nnz-proportional; estimated from mean
+                    occupancy when the weight isn't packed yet
+    sched_slots   : compacted grid-walk length S = sum(max(nnz_j, 1)) (one
+                    step per stored block + one sentinel per empty column)
+
+    The sparse kernels walk the compacted slot list, so every term is
+    linear in the slot count regardless of per-column skew — a padded
+    (Nb, max_nnz) layout would instead pay nb * max(nnz) everywhere.
     """
     bm, bk, bn = mapping.bm, mapping.bk, mapping.bn
     esize = itemsize(dtype)
@@ -97,17 +112,25 @@ def score_matmul(mapping: Mapping, M: int, K: int, N: int, dtype,
     kb = math.ceil(K / bk)
     nb = math.ceil(N / bn)
 
+    if nnz_blocks is None:
+        nnz_blocks = kb * nb * occupancy
+    if sched_slots is None:
+        sched_slots = nnz_blocks                 # mean-occupancy estimate
+
     util = (_align_util(bm, sub) * _align_util(bk, LANE)
             * _align_util(bn, LANE))
-    macs = 2.0 * M * K * N * occupancy * act_occupancy
+    macs = 2.0 * M * bk * bn * nnz_blocks * act_occupancy
     t_compute = compute_term(macs, PEAK_FLOPS * util)
 
-    x_bytes = M * K * esize * occupancy * nb       # re-streamed per col tile
-    w_bytes = K * N * esize * occupancy * mb       # re-streamed per row tile
+    x_bytes = M * bk * esize * sched_slots         # one x tile fetch per slot
+    w_bytes = bk * bn * esize * sched_slots * mb   # re-streamed per row tile
     o_bytes = M * N * esize
     t_stream = stream_term(x_bytes + w_bytes + o_bytes, HBM_BW)
 
-    steps = mb * nb * max(kb * occupancy, 1.0)
+    # >= one step per column; a no-op for a real compacted schedule (its
+    # sentinel slots already make S >= nb), and exactly the old per-step
+    # floor for the occupancy-estimated fallback
+    steps = mb * max(sched_slots, nb)
     return max(t_compute, t_stream) + steps * STEP_OVERHEAD_S
 
 

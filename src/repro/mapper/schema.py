@@ -46,16 +46,24 @@ class Mapping:
     def block_kv(self) -> int:
         return self.bk
 
-    def grid(self, shape: tuple) -> tuple:
+    def grid(self, shape: tuple, slots: int | None = None) -> tuple:
         """Grid implied by this mapping for a problem ``shape``.
 
         matmul-like: shape = (M, K, N) -> (M//bm, N//bn, K-walk length)
         attention:   shape = (B, Sq, Skv, Hkv) -> (B, Hkv, Sq//bq, Skv//bkv)
+
+        ``slots`` (a packed weight's compacted schedule length
+        S = sum(max(nnz_j, 1))) selects the sparse kernels' compacted 2-D
+        grid (M//bm, S): the column walk and the K walk collapse into one
+        slot walk, so grid size is nnz-proportional rather than
+        (N//bn) * max-occupancy.
         """
         if self.op_class == "attention":
             B, Sq, Skv, Hkv = shape
             return (B, Hkv, -(-Sq // self.bm), -(-Skv // self.bk))
         M, K, N = shape
+        if slots is not None:
+            return (-(-M // self.bm), slots)
         return (-(-M // self.bm), -(-N // self.bn),
                 self.k_split * -(-K // (self.bk * self.k_split)))
 

@@ -34,9 +34,14 @@ class Mapper:
     def matmul(self, M: int, K: int, N: int, dtype, *,
                op_class: str = "spmm", wbk: int = 0, wbn: int = 0,
                occupancy: float = 1.0, act_occupancy: float = 1.0,
+               nnz_blocks: Optional[int] = None,
+               sched_slots: Optional[int] = None,
                refine: Optional[Callable[[Mapping], float]] = None) -> Mapping:
         """Best mapping for x:(M,K) @ w:(K,N); wbk/wbn pin the K/N tiling
-        to an existing pack granularity."""
+        to an existing pack granularity.  ``nnz_blocks``/``sched_slots``
+        (from a packed weight's compacted schedule) make the scoring
+        exactly nnz-proportional; the cache key stays density-bucketed, so
+        same-shape weights at the same sparsity bucket share a schedule."""
         key = mapping_key(op_class, (M, K, N, wbk, wbn), dtype, occupancy,
                           act_density=act_occupancy)
         hit = self.cache.get(key)
@@ -54,7 +59,8 @@ class Mapper:
         assert cands, f"empty mapping space for ({M},{K},{N}) {dtype}"
         scored = sorted(cands, key=lambda m: C.score_matmul(
             m, M, K, N, dtype, occupancy=occupancy,
-            act_occupancy=act_occupancy))
+            act_occupancy=act_occupancy, nnz_blocks=nnz_blocks,
+            sched_slots=sched_slots))
         best = self._refine(scored, refine)
         self._commit(key, best)
         return best

@@ -2,7 +2,11 @@
 
 Legality rules (DESIGN.md §Mapper):
   * grid tiles must divide the (padded) problem dims — the kernels assert
-    divisibility rather than masking ragged edges;
+    divisibility rather than masking ragged edges.  For the sparse kernels
+    the K/N walk is the *compacted slot walk* (grid (M//bm, S), see
+    §Compacted address RAM): legality is unchanged — one slot resident per
+    step, same tiles, same VMEM — because compaction reorders the walk, it
+    does not resize any tile;
   * last-dim tiles should be lane multiples (128) and second-minor tiles
     sublane multiples (8 for f32, 16 bf16, 32 int8).  For problem dims that
     have no aligned divisor (e.g. im2col M = B*Ho*Wo), unaligned divisors
@@ -45,7 +49,10 @@ def enumerate_matmul(M: int, K: int, N: int, dtype, *,
     """Legal (bm, bk, bn) mappings for x:(M,K) @ w:(K,N).
 
     For packed sparse weights, bk/bn are pinned to the pack granularity
-    (wbk, wbn) — the K/N walk is the block-index walk; only bm is free.
+    (wbk, wbn) — the K/N walk is the compacted slot walk over the stored
+    blocks; only bm is free.  VMEM residency per step is identical for the
+    padded and compacted walks (one x/w/out tile + scratch), so the same
+    budget check covers both.
     """
     sub = C.sublane(dtype)
     bms = _tile_candidates(M, sub)

@@ -82,6 +82,26 @@ def pack_cnn(params, cfg: CNNConfig, *, density: float = 1.0, bk=0, bn=0):
     return packed
 
 
+def schedule_report(packed, cfg: CNNConfig) -> list:
+    """Per-layer compaction counters for a packed network: stored nonzero
+    blocks (the sum(nnz) ideal), the compacted slot-walk length the kernels
+    actually execute, and what the legacy padded (Nb, max_nnz) layout would
+    have paid — the format-level view of the paper's "no unnecessary
+    computations or memory accesses" claim."""
+    report = []
+    for i, (p, layer) in enumerate(zip(packed, cfg.layers)):
+        sw = p.get("sw")
+        if sw is None:
+            continue
+        report.append({
+            "layer": i, "kind": layer.kind, "shape": sw.shape,
+            "block": sw.block, "density": sw.density,
+            "nnz_blocks": sw.nnz_blocks, "slots": sw.num_slots,
+            "padded_slots": sw.padded_slots,
+        })
+    return report
+
+
 def forward_sparse(packed, cfg: CNNConfig, x, *, act_threshold=None,
                    interpret: bool = True):
     """x: (B, 28, 28, 1) -> logits (B, 10), via the Pallas sparse kernels."""

@@ -366,9 +366,38 @@ def init_mlp(key, cfg: ModelConfig):
     }
 
 
+def pack_mlp(p, *, density: float = 1.0, bk: int = 0, bn: int = 0,
+             magnitude: bool = True) -> dict:
+    """Offline prune+pack of an MLP's three projections into compacted
+    BCSC (`core/sparsity.py`) — each weight gets its own mapper-chosen
+    block granularity unless bk/bn pin one."""
+    from repro.kernels.ops import pack_dense_weight
+    return {name: pack_dense_weight(p[name], density=density, bk=bk, bn=bn,
+                                    magnitude=magnitude)
+            for name in ("w_gate", "w_up", "w_down")}
+
+
+def make_sparse_apply(packed: dict, cfg: ModelConfig, *, act_threshold=None,
+                      interpret: bool = True):
+    """Build the ``sparse_apply`` hook for ``mlp_block`` from packed BCSC
+    weights: each projection runs through the compacted sparse kernels
+    (`sparse_dense`), with outputs sliced back from the pack-padded width
+    to the true layer width."""
+    from repro.kernels.ops import sparse_dense
+    out_dim = {"w_gate": cfg.d_ff, "w_up": cfg.d_ff, "w_down": cfg.d_model}
+
+    def apply(x, name):
+        y = sparse_dense(x, packed[name], act_threshold=act_threshold,
+                         interpret=interpret)
+        return y[..., :out_dim[name]]
+
+    return apply
+
+
 def mlp_block(p, cfg: ModelConfig, x, sparse_apply=None):
     """Gated-SiLU MLP. When the arch enables OpenEye sparsity, the three
-    projections run through the block-sparse path (sparse_apply)."""
+    projections run through the block-sparse path (sparse_apply — see
+    ``make_sparse_apply`` for the packed-BCSC wiring)."""
     dt = x.dtype
     if sparse_apply is not None:
         g = sparse_apply(x, "w_gate")

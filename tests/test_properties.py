@@ -27,11 +27,17 @@ def test_pack_unpack_roundtrip(kb, nb, density, seed):
     dense = unpack(sw)
     expect = apply_mask(w, mask, bk, bn)
     assert bool(jnp.array_equal(dense, expect))
-    # idx entries within range, padding is -1
+    # compacted-layout invariants: idx entries within range (-1 = sentinel),
+    # offsets partition the slot walk, per-column live slots match nnz
     idx = np.asarray(sw.idx)
-    assert ((idx >= -1) & (idx < kb)).all()
+    col = np.asarray(sw.col_id)
+    off = np.asarray(sw.offsets)
     nnz = np.asarray(sw.nnz)
-    assert ((idx >= 0).sum(axis=1) == nnz).all()
+    assert ((idx >= -1) & (idx < kb)).all()
+    assert (np.bincount(col[idx >= 0], minlength=nb) == nnz).all()
+    assert (np.diff(off) == np.maximum(nnz, 1)).all()
+    assert off[0] == 0 and off[-1] == idx.shape[0]
+    assert (np.diff(col) >= 0).all()          # column-major slot order
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,0 +1,195 @@
+"""Compacted-BCSC execution tests (ISSUE 2): correctness under wildly
+skewed per-column occupancy (zero-nnz columns, a single dense column),
+format round-trips for the compacted layout, and the pinned compaction
+property — grid steps and weight DMA proportional to sum(nnz), never to
+Nb * max_nnz."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparsity import (apply_mask, pack, random_block_mask,
+                                 unpack)
+from repro.kernels import ref as R
+from repro.kernels.block_spmm import block_spmm, resolve_spmm_mapping
+from repro.kernels.dual_sparse import dual_sparse_matmul
+from repro.mapper import cost as C
+from repro.mapper.schema import Mapping
+
+
+def _skew_masks():
+    """Named masks with wildly unequal per-column nnz (Kb=4, Nb=4)."""
+    Kb = Nb = 4
+    dense_col = np.zeros((Kb, Nb), bool)
+    dense_col[:, 1] = True                      # one dense column
+    dense_col[0, 0] = dense_col[2, 2] = dense_col[3, 3] = True
+    zero_col = np.zeros((Kb, Nb), bool)
+    zero_col[:, 0] = True                       # dense col + two empty cols
+    zero_col[1, 2] = True
+    single = np.zeros((Kb, Nb), bool)
+    single[2, 3] = True                         # only one block anywhere
+    return [("dense_col", dense_col), ("zero_cols", zero_col),
+            ("single_block", single)]
+
+
+@pytest.mark.parametrize("name,mask", _skew_masks())
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_spmm_skewed_masks(name, mask, dtype):
+    Kb, Nb = mask.shape
+    bk, bn = 128, 128
+    K, N = Kb * bk, Nb * bn
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N), jnp.float32)
+    sw = pack(w.astype(dtype), mask, bk, bn)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, K),
+                          jnp.float32).astype(dtype)
+    y = block_spmm(x, sw)
+    yref = R.block_spmm_ref(x, sw)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yref, np.float32),
+                               rtol=tol, atol=tol * 10)
+    # zero-nnz columns must come out exactly zero
+    nnz = np.asarray(sw.nnz)
+    for j in np.nonzero(nnz == 0)[0]:
+        assert float(jnp.abs(y[:, j * bn:(j + 1) * bn]).max()) == 0.0
+
+
+@pytest.mark.parametrize("name,mask", _skew_masks())
+@pytest.mark.parametrize("thr", [0.0, 4.0, 100.0])
+def test_dual_sparse_skewed_masks(name, mask, thr):
+    # thr=0 never gates; thr=4.0 gates a strict subset of the activation
+    # blocks (asserted below, so the gate x column-boundary-flush x
+    # sentinel interaction really executes); thr=100 gates everything
+    Kb, Nb = mask.shape
+    bk, bn = 128, 128
+    K = Kb * bk
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, Nb * bn), jnp.float32)
+    sw = pack(w, mask, bk, bn)
+    x = jax.random.normal(jax.random.PRNGKey(2), (128, K), jnp.float32)
+    mapping = resolve_spmm_mapping(x, sw)
+    bm = min(mapping.bm, x.shape[0])
+    gated = np.asarray(jnp.abs(x).reshape(-1, bm, Kb, bk).max(axis=(1, 3))
+                       <= thr)
+    if thr == 4.0:
+        assert gated.any() and not gated.all()   # a strict subset gates off
+    elif thr >= 100.0:
+        assert gated.all()
+    y = dual_sparse_matmul(x, sw, act_threshold=thr, mapping=mapping)
+    yref = R.dual_sparse_ref(x, sw, thr, bm=mapping.bm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=2e-5, atol=2e-4)
+    if thr >= 100.0:
+        assert float(jnp.abs(y).max()) == 0.0
+
+
+@pytest.mark.parametrize("name,mask", _skew_masks())
+def test_compacted_roundtrip_skewed(name, mask):
+    bk, bn = 8, 32
+    Kb, Nb = mask.shape
+    w = jax.random.normal(jax.random.PRNGKey(3), (Kb * bk, Nb * bn),
+                          jnp.float32)
+    sw = pack(w, mask, bk, bn)
+    np.testing.assert_array_equal(np.asarray(unpack(sw)),
+                                  np.asarray(apply_mask(w, jnp.asarray(mask),
+                                                        bk, bn)))
+    # layout invariants: column-major slots, offsets partition the walk,
+    # one sentinel (idx == -1, zero block) per empty column
+    idx = np.asarray(sw.idx)
+    col = np.asarray(sw.col_id)
+    off = np.asarray(sw.offsets)
+    nnz = np.asarray(sw.nnz)
+    assert (np.diff(off) == np.maximum(nnz, 1)).all()
+    assert (np.bincount(col[idx >= 0], minlength=Nb) == nnz).all()
+    sentinels = idx < 0
+    assert sentinels.sum() == (nnz == 0).sum()
+    assert not np.asarray(sw.blocks)[sentinels].any()
+
+
+def test_compaction_pinned_nnz_proportional():
+    """ISSUE 2 acceptance: skewed mask (one dense column, rest ~10%) —
+    compacted grid steps and weight-DMA bytes within 15% of the sum(nnz)
+    ideal, where the padded layout paid Nb * max_nnz."""
+    Kb, Nb, bk, bn = 8, 8, 128, 128
+    rng = np.random.default_rng(0)
+    mask = rng.random((Kb, Nb)) < 0.1
+    mask[:, 0] = True
+    for j in range(1, Nb):
+        if not mask[:, j].any():
+            mask[rng.integers(Kb), j] = True
+    w = jax.random.normal(jax.random.PRNGKey(0), (Kb * bk, Nb * bn))
+    sw = pack(w, mask, bk, bn)
+    M = 256
+    mapping = resolve_spmm_mapping(
+        jax.random.normal(jax.random.PRNGKey(1), (M, Kb * bk)), sw)
+    sched = R.spmm_schedule_ref(sw, M, mapping.bm)
+    ideal = sched["ideal_steps"]
+    assert sched["compacted_steps"] <= math.ceil(1.15 * ideal)
+    assert sched["compacted_w_bytes"] <= math.ceil(1.15 * sched["ideal_w_bytes"])
+    # and the padded layout genuinely wasn't nnz-proportional here
+    assert sched["padded_steps"] >= 2 * sched["compacted_steps"]
+    # kernel grid == the counted schedule: (M/bm) * num_slots steps
+    assert sw.num_slots == int(np.maximum(np.asarray(sw.nnz), 1).sum())
+    assert mapping.grid((M, Kb * bk, Nb * bn), slots=sw.num_slots) == \
+        (M // mapping.bm, sw.num_slots)
+
+
+def test_score_matmul_is_slot_proportional():
+    """Mapper cost: more schedule slots (same shape/density bucket) =>
+    strictly higher cost — the scoring tracks the compacted schedule."""
+    m = Mapping("spmm", bm=128, bk=128, bn=128, wbk=128, wbn=128)
+    compact = C.score_matmul(m, 512, 1024, 1024, jnp.float32,
+                             occupancy=0.25, nnz_blocks=16, sched_slots=16)
+    padded = C.score_matmul(m, 512, 1024, 1024, jnp.float32,
+                            occupancy=0.25, nnz_blocks=16, sched_slots=64)
+    assert compact < padded
+
+
+def test_random_block_mask_splits_key():
+    # regression: uniform and randint must not consume the same key.  At
+    # density 0 the mask is exactly the forced one-per-column rows, which
+    # pins them to the randint draw from the *split* subkey — reverting to
+    # the reused parent key changes the draw and fails the equality.
+    key = jax.random.PRNGKey(0)
+    Kb, Nb = 16, 64
+    m0 = np.asarray(random_block_mask(key, Kb, Nb, 0.0))
+    assert (m0.sum(axis=0) == 1).all()          # density 0 => force only
+    _, kf = jax.random.split(key)
+    split_rows = np.asarray(jax.random.randint(kf, (Nb,), 0, Kb))
+    reused_rows = np.asarray(jax.random.randint(key, (Nb,), 0, Kb))
+    assert (np.argmax(m0, axis=0) == split_rows).all()
+    assert (split_rows != reused_rows).any()    # the pin distinguishes them
+
+
+def test_pack_large_weight_is_fast():
+    # satellite: pack/unpack are vectorized — a large weight packs without
+    # the old O(Nb * max_nnz) Python loop crawl
+    import time
+    K, N, bk, bn = 4096, 4096, 128, 128
+    w = np.random.default_rng(0).standard_normal((K, N)).astype(np.float32)
+    mask = random_block_mask(jax.random.PRNGKey(0), K // bk, N // bn, 0.5)
+    t0 = time.perf_counter()
+    sw = pack(w, mask, bk, bn)
+    dense = unpack(sw)
+    assert time.perf_counter() - t0 < 5.0
+    np.testing.assert_array_equal(np.asarray(dense),
+                                  np.asarray(apply_mask(jnp.asarray(w), mask,
+                                                        bk, bn)))
+
+
+def test_sparse_mlp_apply_matches_dense():
+    """models/layers.py wiring: mlp_block through the packed compacted
+    kernels equals the dense path at density=1."""
+    from repro.configs import get_config, reduced
+    from repro.models import layers as L
+    cfg = reduced(get_config("qwen3-0.6b"))
+    p = L.init_mlp(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          jnp.float32)
+    dense = L.mlp_block(p, cfg, x)
+    packed = L.pack_mlp(p, density=1.0)
+    sparse = L.mlp_block(p, cfg, x,
+                         sparse_apply=L.make_sparse_apply(packed, cfg))
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense),
+                               rtol=2e-4, atol=2e-4)
