@@ -1,0 +1,141 @@
+"""Benchmark-regression gate: compare freshly-emitted benchmark artifacts
+against committed baselines and fail on >15% regression in the
+*deterministic* schedule counters — grid steps and modeled DMA bytes.
+
+Wall-clock timings are machine-dependent and are never gated; the gated
+counters are pure functions of the shapes, the pack format, and the
+mapper's analytic choices, so a regression means the code really got
+worse: a kernel reverted to a padded walk, a pack format lost compaction,
+the streaming conv started re-fetching bands, or the mapper's analytic
+winner picked a costlier schedule.
+
+Baselines live in ``benchmarks/baselines/`` and are regenerated with the
+same --quick invocations CI runs (shape fields are part of the row match,
+so a baseline/fresh shape mismatch fails loudly rather than comparing
+apples to oranges).
+
+    PYTHONPATH=src python benchmarks/check_regress.py \
+        --fresh-dir . [--baseline-dir benchmarks/baselines] [--tol 1.15]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+TOL = 1.15
+
+# per-artifact spec: how to list rows, identify a row, and which counters
+# are gated (all "lower is better"); shape fields must match exactly
+SPECS = {
+    "BENCH_mapper.json": {
+        "rows": lambda d: d["results"],
+        "key": lambda r: f"{r['op']}_{'x'.join(str(s) for s in r['shape'])}",
+        "match": ("shape", "density"),
+        "counters": ("analytic_steps", "analytic_model_s"),
+    },
+    "BENCH_kernel_sparsity.json": {
+        "rows": lambda d: d["rows"],
+        "key": lambda r: r["case"],
+        "match": ("M", "K", "N", "bk", "bn"),
+        "counters": ("measured_steps", "measured_dual_steps",
+                     "compacted_steps", "compacted_w_bytes"),
+    },
+    "BENCH_conv_stream.json": {
+        "rows": lambda d: d["rows"],
+        "key": lambda r: r["case"],
+        "match": ("B", "H", "W", "cin", "cout", "kh", "kw", "stride"),
+        "counters": ("grid_steps", "band_fetches", "streamed_x_bytes"),
+    },
+}
+
+
+def compare_artifact(name: str, baseline_path: str, fresh_path: str,
+                     tol: float) -> list[str]:
+    """Return a list of failure messages (empty = pass)."""
+    spec = SPECS[name]
+    with open(baseline_path) as f:
+        base_rows = {spec["key"](r): r for r in spec["rows"](json.load(f))}
+    with open(fresh_path) as f:
+        fresh_rows = {spec["key"](r): r for r in spec["rows"](json.load(f))}
+
+    fails = []
+    # a gated counter absent from every baseline row means the SPECS entry
+    # (or the bench's emitted schema) drifted — that must not silently
+    # disable the gate
+    for c in spec["counters"]:
+        if not any(r.get(c) is not None for r in base_rows.values()):
+            fails.append(f"{name}: gated counter {c!r} absent from the "
+                         "committed baseline — SPECS/schema drift; "
+                         "regenerate the baseline")
+    for key, base in base_rows.items():
+        fresh = fresh_rows.get(key)
+        if fresh is None:
+            fails.append(f"{name}: case {key!r} missing from fresh run "
+                         "(coverage regression)")
+            continue
+        mismatched = [f for f in spec["match"]
+                      if f in base and base.get(f) != fresh.get(f)]
+        if mismatched:
+            fails.append(f"{name}: case {key!r} config drift on "
+                         f"{mismatched} — regenerate the baseline")
+            continue
+        for c in spec["counters"]:
+            b, v = base.get(c), fresh.get(c)
+            if b is None:
+                continue         # counter new since this baseline
+            if v is None:
+                fails.append(f"{name}: {key!r} no longer emits gated "
+                             f"counter {c!r} (schema regression)")
+                continue
+            if v > b * tol + 1e-12:
+                fails.append(
+                    f"{name}: {key!r} {c} regressed {b} -> {v} "
+                    f"({v / b:.2f}x > {tol:.2f}x tolerance)")
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines")
+    ap.add_argument("--fresh-dir", default=".")
+    ap.add_argument("--tol", type=float, default=TOL)
+    ap.add_argument("--benches", default=",".join(SPECS),
+                    help="comma-separated artifact names to gate")
+    args = ap.parse_args()
+
+    fails, checked = [], 0
+    for name in args.benches.split(","):
+        name = name.strip()
+        if name not in SPECS:
+            fails.append(f"unknown artifact {name!r} "
+                         f"(known: {', '.join(SPECS)})")
+            continue
+        base = os.path.join(args.baseline_dir, name)
+        fresh = os.path.join(args.fresh_dir, name)
+        if not os.path.exists(base):
+            fails.append(f"missing committed baseline {base} — generate it "
+                         "with the bench's --quick mode and commit it")
+            continue
+        if not os.path.exists(fresh):
+            fails.append(f"missing fresh artifact {fresh} — did the "
+                         "benchmark step run?")
+            continue
+        msgs = compare_artifact(name, base, fresh, args.tol)
+        fails.extend(msgs)
+        checked += 1
+        print(f"{name}: {'OK' if not msgs else f'{len(msgs)} FAILURE(S)'}")
+
+    if fails:
+        print(f"\nregression gate FAILED ({len(fails)} issue(s)):")
+        for m in fails:
+            print(f"  - {m}")
+        return 1
+    print(f"\nregression gate OK: {checked} artifacts within "
+          f"{args.tol:.2f}x of committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -180,9 +180,11 @@ def _emit(rows: list[dict], out: str) -> None:
     print(f"wrote {out} ({len(rows)} rows)")
 
 
-def run(csv_rows: list) -> None:
+def run(csv_rows: list, quick: bool = False) -> None:
     """Harness entry point (benchmarks/run.py)."""
-    rows = sweep(256, 1024, 1024, 128, 128)
+    shapes = (64, 512, 512, 128, 128) if quick \
+        else (256, 1024, 1024, 128, 128)
+    rows = sweep(*shapes, iters=2 if quick else 3)
     print("# case | density | ideal/compacted/padded steps | spmm us | err")
     for r in rows:
         print(f"  {r['case']:>16} | {r['density']:.2f} | "

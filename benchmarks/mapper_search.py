@@ -71,7 +71,20 @@ def _measure_spmm(M, K, N, density, mapper: Mapper, *, iters: int):
     # the default competes in the measured pool: fastest measured wins
     pool = set(measured) | {tuned}
     tuned = min(pool, key=timer)
-    return default, tuned, measured[default], measured[tuned]
+    # deterministic counters for the regression gate: the *analytic*
+    # winner's modeled schedule (no on-device refinement noise)
+    analytic = Mapper(MappingCache()).matmul(
+        M, K, N, jnp.float32, op_class="spmm", wbk=bk, wbn=bn,
+        occupancy=sw.density, nnz_blocks=sw.nnz_blocks,
+        sched_slots=sw.num_slots)
+    model = {
+        "analytic_mapping": analytic.to_json(),
+        "analytic_steps": (M // min(analytic.bm, M)) * sw.num_slots,
+        "analytic_model_s": C.score_matmul(
+            analytic, M, K, N, jnp.float32, occupancy=sw.density,
+            nnz_blocks=sw.nnz_blocks, sched_slots=sw.num_slots),
+    }
+    return default, tuned, measured[default], measured[tuned], model
 
 
 def _measure_attention(B, Sq, Hkv, G, D, causal, window, mapper: Mapper, *,
@@ -99,7 +112,17 @@ def _measure_attention(B, Sq, Hkv, G, D, causal, window, mapper: Mapper, *,
                              causal=causal, window=window, refine=timer)
     pool = set(measured) | {tuned}
     tuned = min(pool, key=timer)
-    return default, tuned, measured[default], measured[tuned]
+    analytic = Mapper(MappingCache()).attention(
+        B, Sq, Sq, Hkv, G, D, jnp.float32, causal=causal, window=window)
+    grid = analytic.grid((B, Sq, Sq, Hkv))
+    model = {
+        "analytic_mapping": analytic.to_json(),
+        "analytic_steps": int(grid[0] * grid[1] * grid[2] * grid[3]),
+        "analytic_model_s": C.score_attention(
+            analytic, B, Sq, Sq, Hkv, G, D, jnp.float32, causal=causal,
+            window=window),
+    }
+    return default, tuned, measured[default], measured[tuned], model
 
 
 def search(*, iters: int = 3, quick: bool = False,
@@ -109,22 +132,24 @@ def search(*, iters: int = 3, quick: bool = False,
     attn = ATTN_SHAPES[:1] if quick else ATTN_SHAPES
     results = []
     for M, K, N, density in spmm:
-        d, t, dus, tus = _measure_spmm(M, K, N, density, mapper, iters=iters)
+        d, t, dus, tus, model = _measure_spmm(M, K, N, density, mapper,
+                                              iters=iters)
         results.append({
             "op": "spmm", "shape": [M, K, N], "density": density,
             "default_mapping": d.to_json(), "tuned_mapping": t.to_json(),
             "default_us": dus * 1e6, "tuned_us": tus * 1e6,
-            "speedup": dus / tus if tus else 1.0,
+            "speedup": dus / tus if tus else 1.0, **model,
         })
     for B, Sq, Hkv, G, D, causal, window in attn:
-        d, t, dus, tus = _measure_attention(B, Sq, Hkv, G, D, causal, window,
-                                            mapper, iters=iters)
+        d, t, dus, tus, model = _measure_attention(B, Sq, Hkv, G, D, causal,
+                                                   window, mapper,
+                                                   iters=iters)
         results.append({
             "op": "attention", "shape": [B, Sq, Hkv, G, D],
             "causal": causal, "window": window,
             "default_mapping": d.to_json(), "tuned_mapping": t.to_json(),
             "default_us": dus * 1e6, "tuned_us": tus * 1e6,
-            "speedup": dus / tus if tus else 1.0,
+            "speedup": dus / tus if tus else 1.0, **model,
         })
     if cache_path:
         mapper.cache.save(cache_path)

@@ -5,32 +5,84 @@ Prints ``name,us_per_call,derived`` CSV at the end.
   fig5_resources   — Fig 5: linear resource scaling
   table2_cnn       — Table 2 workload on the sparse Pallas kernels
   kernel_sparsity  — compressed-domain execution sweep
+  conv_stream      — fused streaming conv vs materialized im2col
   roofline_table   — 40-cell TPU roofline from the dry-run artifacts
   mapper_search    — default vs mapper-tuned kernel schedules
+
+Modules are *discovered* (every ``benchmarks/*.py`` exposing ``run``), so a
+newly added benchmark cannot rot unexecuted: ``--all --quick`` is the CI
+smoke step that invokes each one in its quick mode and exits nonzero if
+any raised.
 """
 from __future__ import annotations
 
+import argparse
+import importlib
+import inspect
+import pathlib
+import sys
 import traceback
 
+_SKIP = {"run", "check_regress", "__init__"}
 
-def main() -> None:
-    from benchmarks import (fig5_resources, kernel_sparsity, mapper_search,
-                            roofline_table, table2_cnn, table3_scaling)
+
+def discover() -> tuple[list, list]:
+    """Every benchmarks/*.py module with a ``run(csv_rows, ...)`` entry.
+    Returns (modules, import_failures) — an import-time error in one
+    benchmark must not keep the others from running."""
+    here = pathlib.Path(__file__).parent
+    if str(here.parent) not in sys.path:     # `python benchmarks/run.py`
+        sys.path.insert(0, str(here.parent))
+    mods, broken = [], []
+    for p in sorted(here.glob("*.py")):
+        if p.stem in _SKIP:
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{p.stem}")
+        except Exception:
+            traceback.print_exc()
+            broken.append(p.stem)
+            continue
+        if callable(getattr(mod, "run", None)):
+            mods.append(mod)
+    return mods, broken
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--all", action="store_true",
+                    help="smoke-invoke every discovered benchmark "
+                         "(implies --quick; nonzero exit on any failure)")
+    ap.add_argument("--quick", action="store_true",
+                    help="pass quick mode to benchmarks that support it")
+    args = ap.parse_args()
+    quick = args.quick or args.all
+
     csv_rows: list = []
-    for mod in (table3_scaling, fig5_resources, table2_cnn, kernel_sparsity,
-                roofline_table, mapper_search):
+    mods, failed = discover()
+    for name in failed:
+        csv_rows.append((f"{name}_FAILED", 0.0, "import error"))
+    for mod in mods:
         name = mod.__name__.split(".")[-1]
         print(f"\n==== {name} ====", flush=True)
         try:
-            mod.run(csv_rows)
+            if quick and "quick" in inspect.signature(mod.run).parameters:
+                mod.run(csv_rows, quick=True)
+            else:
+                mod.run(csv_rows)
         except Exception:
             traceback.print_exc()
             csv_rows.append((f"{name}_FAILED", 0.0, "error"))
+            failed.append(name)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.1f},{derived}")
+    if failed:
+        print(f"\n{len(failed)} benchmark(s) FAILED: {', '.join(failed)}")
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -24,9 +24,10 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(csv_rows: list) -> None:
+def run(csv_rows: list, quick: bool = False) -> None:
     params = cnn.init_cnn(jax.random.PRNGKey(0), CNN)
-    x = jax.random.uniform(jax.random.PRNGKey(1), (8, 28, 28, 1))
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (2 if quick else 8, 28, 28, 1))
 
     full_ops = cnn.op_count(CNN)
     print(f"# op count (full network): {full_ops} "
@@ -50,14 +51,16 @@ def run(csv_rows: list) -> None:
     assert bool(jnp.isfinite(out5).all())
 
     print("# compacted schedule at density=0.5 "
-          "(slots vs legacy padded Nb*max_nnz):")
-    for r in cnn.schedule_report(packed5, CNN):
+          "(slots vs legacy padded Nb*max_nnz; conv: streaming reduction):")
+    for r in cnn.schedule_report(packed5, CNN, batch=x.shape[0]):
+        extra = (f" act-DMA reduction={r['materialized_vs_streamed']:.1f}x"
+                 if r["kind"] == "conv" else "")
         print(f"#   layer {r['layer']} ({r['kind']}): nnz={r['nnz_blocks']} "
-              f"slots={r['slots']} padded={r['padded_slots']}")
+              f"slots={r['slots']} padded={r['padded_slots']}{extra}")
 
     print(f"# dense {us_dense:.0f}us | kernel(d=1.0) {us_sparse:.0f}us "
           f"(rel err {err:.1e}) | kernel(d=0.5) {us_sparse5:.0f}us "
-          f"(interpret mode — correctness path, not TPU timing)")
+          "(interpret mode — correctness path, not TPU timing)")
     csv_rows.append(("table2_cnn_dense", us_dense, f"ops={full_ops}"))
     csv_rows.append(("table2_cnn_sparse_d100", us_sparse, f"err={err:.1e}"))
     csv_rows.append(("table2_cnn_sparse_d50", us_sparse5, "density=0.5"))

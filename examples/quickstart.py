@@ -3,12 +3,10 @@ checkpoint, resume, and greedy-decode from the trained model.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.launch.train import train
-from repro.models import model_api
 from repro.serve.engine import Request, ServeEngine
 
 

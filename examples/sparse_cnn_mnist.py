@@ -35,7 +35,7 @@ def main():
     # activation gating (Cnvlutin-style) on top of weight sparsity
     packed = cnn.pack_cnn(params, CNN, density=0.5)
     out = cnn.forward_sparse(packed, CNN, x, act_threshold=0.05)
-    print(f"dual sparsity (weights 0.5 + act gate 0.05): "
+    print("dual sparsity (weights 0.5 + act gate 0.05): "
           f"finite={bool(jnp.isfinite(out).all())}")
 
     print("\nOpenEye FPGA perfmodel (Table 3 reproduction):")

@@ -17,7 +17,7 @@ Pattern codes (mixer + ffn per layer):
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 ATTN_CODES = ("G", "L", "GM", "SM")

@@ -3,7 +3,7 @@
 Used for the faithful reproduction of Table 3 / Fig 6 and the sparse-kernel
 end-to-end example. Not part of the 40 LM cells.
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 

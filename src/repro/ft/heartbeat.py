@@ -19,7 +19,7 @@ import os
 import signal
 import threading
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 
 class Heartbeat:

@@ -1,0 +1,214 @@
+"""Pallas TPU kernel: fused implicit-im2col block-sparse convolution.
+
+The materialized conv path (`ops.sparse_conv2d(..., stream=False)`) first
+writes the full im2col patch matrix to HBM — a kh*kw-fold blow-up of the
+activations (9x for the paper's 3x3 layers) — and only then runs the
+compacted BCSC slot walk over it.  The OpenEye PE array never does that:
+it *streams* activation rows, fetching each input pixel once and reusing
+it across all kh*kw kernel offsets.  This kernel restores that dataflow on
+TPU (DESIGN.md §Streaming conv dataflow):
+
+  * the grid is the PR 2 compacted ``(M/bm, S)`` slot walk — one step per
+    stored weight block plus one sentinel per empty column — but the
+    activation operand is sourced directly from ``(B, H, W, Cin)`` row
+    bands resident in VMEM; no patch matrix ever touches HBM;
+  * the weight's K axis is laid out *channel-block-major*: K-block
+    ``kb = cb*kh*kw + di*kw + dj`` decodes to a (kernel-offset, channel
+    block) pair.  The x BlockSpec depends only on ``cb`` (and the row
+    tile), so the kh*kw consecutive slots of one channel block reuse a
+    single fetched band — Pallas skips the DMA when the block index is
+    unchanged.  The (di, dj) offset is applied *in VMEM* with a dynamic
+    slice + static stride, which is exactly the FPGA's
+    fetch-once/reuse-kh*kw row streaming;
+  * a row tile is ``bb`` images x ``hb`` output rows (mapping fields
+    ``bb``/``bm``); its input band carries the (kh - stride)-row halo, and
+    the mapper's conv legality admits a band height only if that halo'd
+    band fits VMEM;
+  * stride and SAME padding (asymmetric for even kernels) are handled on
+    the host by padding once — an O(kh) halo, never the O(kh*kw) im2col
+    copy — and the dual-sparse activation gate is a scalar-prefetched
+    per-(row-tile, K-block) bitmap over the *window* occupancy, matching
+    ``ref.conv_dual_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+from repro.core.sparsity import BlockSparseWeight
+from repro.mapper.schema import Mapping
+
+
+def conv_out_hw(H: int, W: int, stride: int) -> tuple[int, int]:
+    """SAME-padding output extent (matches jax.lax SAME: ceil-div)."""
+    return -(-H // stride), -(-W // stride)
+
+
+def same_pads(size: int, k: int, stride: int) -> tuple[int, int]:
+    """XLA SAME padding (lo, hi) — asymmetric for even kernels."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    return total // 2, total - total // 2
+
+
+def resolve_conv_mapping(x, sw: BlockSparseWeight, meta, *,
+                         act_occupancy: float = 1.0) -> Mapping | None:
+    """Mapper resolution for the fused kernel: bk/bn are pinned to the pack
+    granularity; the batch tile bb and band height bm are searched under
+    the halo-fits-VMEM legality.  Returns None when no band tile is legal
+    (the caller falls back to the materialized im2col path)."""
+    from repro.mapper.search import default_mapper
+    kh, kw, cin, cout, stride = meta
+    B, H, W, _ = x.shape
+    bk, bn = sw.block
+    return default_mapper().conv(B, H, W, cin, sw.shape[1], kh, kw, stride,
+                                 x.dtype, wbk=bk, wbn=bn,
+                                 occupancy=sw.density,
+                                 act_occupancy=act_occupancy,
+                                 nnz_blocks=sw.nnz_blocks,
+                                 sched_slots=sw.num_slots)
+
+
+def _kernel(kk: int, kw: int, stride: int, hb: int, Wo: int,
+            idx_ref, col_ref, off_ref, gate_ref, x_ref, w_ref, o_ref,
+            acc_ref):
+    i = pl.program_id(0)
+    s = pl.program_id(1)
+    j = col_ref[s]
+
+    @pl.when(s == off_ref[j])
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kb = idx_ref[s]
+
+    # sentinel slots (kb < 0) and gated-out activation windows skip their
+    # MACs; the band stays resident either way (gating never steers DMA)
+    @pl.when((kb >= 0) & (gate_ref[i, jnp.maximum(kb, 0)] > 0))
+    def _mac():
+        off = jnp.maximum(kb, 0) % kk
+        di = off // kw
+        dj = off % kw
+        xband = x_ref[...]                    # (bb, 1, band_rows, Wp, bk)
+        bb, _, _, _, bk = xband.shape
+        span_h = (hb - 1) * stride + 1
+        span_w = (Wo - 1) * stride + 1
+        # the kernel-offset shift happens here, in VMEM — the same band
+        # serves all kh*kw offsets of its channel block
+        xw = jax.lax.dynamic_slice(
+            xband, (0, 0, di, dj, 0), (bb, 1, span_h, span_w, bk))
+        xw = xw[:, 0, ::stride, ::stride, :]  # (bb, hb, Wo, bk)
+        acc_ref[...] += jnp.dot(
+            xw.reshape(bb * hb * Wo, bk), w_ref[0],
+            preferred_element_type=jnp.float32).reshape(acc_ref.shape)
+
+    @pl.when(s + 1 == off_ref[j + 1])
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def fused_sparse_conv2d(x, sw: BlockSparseWeight, meta, *,
+                        act_threshold=None, mapping: Mapping | None = None,
+                        interpret: bool = True):
+    """x: (B, H, W, Cin) conv sw -> (B, Ho, Wo, Cout), SAME padding.
+
+    ``sw`` must be packed in the streamed layout (`ops.pack_conv_weight`):
+    K axis = (channel-block, kh, kw, channel-within-block).  ``meta`` is
+    (kh, kw, cin, cout, stride)."""
+    if mapping is None:
+        mapping = resolve_conv_mapping(x, sw, meta)
+    assert mapping is not None and mapping.op_class == "conv", mapping
+    thr = None if act_threshold is None else float(act_threshold)
+    return _fused_conv(x, sw, meta=tuple(meta), act_threshold=thr,
+                       mapping=mapping, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("meta", "act_threshold",
+                                             "mapping", "interpret"))
+def _fused_conv(x, sw: BlockSparseWeight, *, meta, act_threshold,
+                mapping: Mapping, interpret: bool):
+    kh, kw, cin, cout, stride = meta
+    B, H, W, C = x.shape
+    assert C == cin, (x.shape, meta)
+    bk, bn = sw.block
+    assert (mapping.bk, mapping.bn) == (bk, bn), \
+        f"mapping K/N tiles {mapping.bk, mapping.bn} != pack granularity {sw.block}"
+    kk = kh * kw
+    KB = sw.shape[0] // bk
+    assert KB % kk == 0, \
+        f"weight K axis {sw.shape[0]} is not streamed-layout (Cb*{kk}*{bk})"
+    Cb = KB // kk
+    cin_pad = Cb * bk
+    Npad = sw.shape[1]
+    S = sw.idx.shape[0]
+
+    Ho, Wo = conv_out_hw(H, W, stride)
+    bb, hb = mapping.bb, min(mapping.bm, Ho)
+    assert B % bb == 0 and Ho % hb == 0, (B, Ho, mapping)
+
+    # one host-side halo pad (O(kh) rows), never the O(kh*kw) im2col copy
+    from repro.mapper.cost import conv_band_rows, conv_padded_wh
+    ph0, ph1 = same_pads(H, kh, stride)
+    pw0, pw1 = same_pads(W, kw, stride)
+    Hp, Wp = conv_padded_wh(Ho, Wo, kh, kw, stride)
+    xp = jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, cin_pad - cin)))
+    xp = xp[:, :Hp, :Wp, :]              # crop the stride>1 overhang
+
+    nbands = Ho // hb
+    band = conv_band_rows(hb, kh, stride)
+    # band gather: disjoint hb-row output bands, each with its input halo
+    xb = jnp.stack([xp[:, b * hb * stride: b * hb * stride + band]
+                    for b in range(nbands)], axis=1)
+    # xb: (B, nbands, band, Wp, cin_pad)
+
+    mtiles = (B // bb) * nbands
+    if act_threshold is None:
+        gate = jnp.ones((mtiles, KB), jnp.int32)
+    else:
+        # per-(row-tile, K-block) window occupancy — the activations'
+        # "address RAM", scalar-prefetched like the weight index tables
+        r = jnp.abs(xb).reshape(B, nbands, band, Wp, Cb, bk).max(axis=-1)
+        wins = []
+        for di in range(kh):
+            for dj in range(kw):
+                wins.append(r[:, :, di: di + (hb - 1) * stride + 1: stride,
+                              dj: dj + (Wo - 1) * stride + 1: stride,
+                              :].max(axis=(2, 3)))
+        wmax = jnp.stack(wins, axis=-1)              # (B, nbands, Cb, kk)
+        wmax = wmax.reshape(B // bb, bb, nbands, Cb, kk).max(axis=1)
+        gate = (wmax > act_threshold).astype(jnp.int32).reshape(mtiles, KB)
+
+    def x_map(i, s, idx_ref, col_ref, off_ref, gate_ref):
+        cb = jnp.maximum(idx_ref[s], 0) // kk        # sentinel aliases cb 0
+        return (i // nbands, i % nbands, 0, 0, cb)
+
+    def w_map(i, s, idx_ref, col_ref, off_ref, gate_ref):
+        return (s, 0, 0)
+
+    def o_map(i, s, idx_ref, col_ref, off_ref, gate_ref):
+        return (i // nbands, i % nbands, col_ref[s])
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, kk, kw, stride, hb, Wo),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(mtiles, S),
+            in_specs=[
+                pl.BlockSpec((bb, 1, band, Wp, bk), x_map),
+                pl.BlockSpec((1, bk, bn), w_map),
+            ],
+            out_specs=pl.BlockSpec((bb, hb * Wo, bn), o_map),
+            scratch_shapes=[pltpu.VMEM((bb, hb * Wo, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Ho * Wo, Npad), x.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(sw.idx, sw.col_id, sw.offsets, gate, xb, sw.blocks)
+    return out[:, :, :cout].reshape(B, Ho, Wo, cout)

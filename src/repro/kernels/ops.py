@@ -2,9 +2,12 @@
 
 On CPU the kernels execute in interpret mode (correctness path, used by
 tests and the paper-CNN example); on a real TPU set ``interpret=False``.
-``sparse_conv2d`` lowers the paper's 3x3 convolutions to im2col +
-``block_spmm`` — the same "convolution as matmul over streamed activation
-rows" mapping the OpenEye PE array realizes spatially.
+``sparse_conv2d`` runs the paper's convolutions through the *fused*
+implicit-im2col streaming kernel (`kernels/conv_spmm.py`) — activation row
+bands stay in VMEM and are reused across all kh*kw kernel offsets, the
+same "stream each input pixel once" dataflow the OpenEye PE array realizes
+spatially.  The materialized im2col + ``block_spmm`` path is kept as the
+oracle/fallback (``stream=False``, or when no band tile fits VMEM).
 """
 from __future__ import annotations
 
@@ -14,13 +17,16 @@ import jax.numpy as jnp
 from repro.core.sparsity import (BlockSparseWeight, magnitude_block_mask,
                                  pack, random_block_mask)
 from repro.kernels.block_spmm import block_spmm, resolve_spmm_mapping
+from repro.kernels.conv_spmm import (conv_out_hw, fused_sparse_conv2d,
+                                     resolve_conv_mapping, same_pads)
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.dual_sparse import dual_sparse_matmul
 from repro.mapper.schema import Mapping
 
 __all__ = ["block_spmm", "dual_sparse_matmul", "decode_attention",
-           "sparse_conv2d", "im2col", "sparse_dense", "pack_dense_weight",
-           "spmm_schedule_stats"]
+           "sparse_conv2d", "fused_sparse_conv2d", "im2col",
+           "im2col_streamed", "sparse_dense", "pack_dense_weight",
+           "pack_conv_weight", "spmm_schedule_stats", "conv_schedule_stats"]
 
 
 def spmm_schedule_stats(M: int, sw: BlockSparseWeight, *,
@@ -41,19 +47,46 @@ def spmm_schedule_stats(M: int, sw: BlockSparseWeight, *,
 
 
 def im2col(x, kh: int, kw: int, *, stride: int = 1):
-    """x: (B, H, W, C) -> patches (B*Ho*Wo, kh*kw*C), SAME padding."""
+    """x: (B, H, W, C) -> patches (B*Ho*Wo, kh*kw*C), SAME padding.
+
+    SAME follows XLA exactly: Ho = ceil(H/stride) and the total padding
+    max((Ho-1)*stride + kh - H, 0) splits low/high asymmetrically — even
+    kernel sizes and stride>1 therefore match ``lax.conv_general_dilated``
+    (the old ``ph = kh // 2`` / ``Ho = H // stride`` silently mis-sized
+    those cases)."""
     B, H, W, C = x.shape
-    ph, pw = kh // 2, kw // 2
-    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
-    Ho, Wo = H // stride, W // stride
+    assert kh >= 1 and kw >= 1 and stride >= 1, (kh, kw, stride)
+    Ho, Wo = conv_out_hw(H, W, stride)
+    ph0, ph1 = same_pads(H, kh, stride)
+    pw0, pw1 = same_pads(W, kw, stride)
+    xp = jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
     cols = []
     for i in range(kh):
         for j in range(kw):
             cols.append(jax.lax.slice(
-                xp, (0, i, j, 0), (B, i + H, j + W, C),
+                xp, (0, i, j, 0),
+                (B, i + (Ho - 1) * stride + 1, j + (Wo - 1) * stride + 1, C),
                 (1, stride, stride, 1)))
     patches = jnp.concatenate(cols, axis=-1)           # (B, Ho, Wo, kh*kw*C)
+    assert patches.shape == (B, Ho, Wo, kh * kw * C), patches.shape
     return patches.reshape(B * Ho * Wo, kh * kw * C), (B, Ho, Wo)
+
+
+def im2col_streamed(x, kh: int, kw: int, *, stride: int = 1, bk: int):
+    """im2col in the *streamed* K layout the fused conv kernel's weights
+    use: Cin padded per kernel offset to a ``bk`` multiple, K-blocks
+    ordered channel-block-major — element K index is
+    ``(cb*kh*kw + di*kw + dj) * bk + c``, so block ``kb`` decodes to one
+    (kernel-offset, channel-block) pair (DESIGN.md §Streaming conv
+    dataflow)."""
+    B, H, W, C = x.shape
+    cin_pad = -(-C // bk) * bk
+    Cb = cin_pad // bk
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cin_pad - C)))
+    patches, (B, Ho, Wo) = im2col(xp, kh, kw, stride=stride)
+    kk = kh * kw
+    p = patches.reshape(-1, kk, Cb, bk).transpose(0, 2, 1, 3)
+    return p.reshape(-1, Cb * kk * bk), (B, Ho, Wo)
 
 
 def _pad_to(x, m, axis):
@@ -66,16 +99,37 @@ def _pad_to(x, m, axis):
 
 
 def sparse_conv2d(x, sw: BlockSparseWeight, meta, *, act_threshold=None,
-                  mapping: Mapping | None = None, interpret: bool = True):
-    """Conv via im2col + block-sparse matmul.
+                  mapping: Mapping | None = None, interpret: bool = True,
+                  stream: bool = True):
+    """Block-sparse conv, SAME padding; x: (B, H, W, Cin), meta:
+    (kh, kw, Cin, Cout, stride); ``sw`` packs the streamed-layout weight
+    matrix (`pack_conv_weight`).
 
-    x: (B, H, W, Cin); sw packs the (kh*kw*Cin, Cout) weight matrix, padded
-    to block multiples; meta: (kh, kw, Cin, Cout, stride).  The schedule is
-    mapper-resolved over the im2col matmul view (op class "conv").
+    Default path is the *fused* implicit-im2col streaming kernel: no patch
+    matrix in HBM, activation row bands reused across all kh*kw offsets.
+    ``stream=False`` (or a mapper verdict that no halo'd band fits VMEM,
+    or an explicit spmm mapping) selects the materialized im2col +
+    block_spmm oracle path.
+
+    As everywhere in this repo, activation gating is approximate and its
+    granularity rides the schedule (DESIGN.md corollary 1): the fused path
+    gates per (row-tile, K-block) *window* (`ref.conv_dual_ref`), the
+    materialized path per (bm, bk) patch-matrix tile — so with
+    ``act_threshold`` set the two paths may keep different activation
+    blocks.  At ``act_threshold`` 0/None both are exact.
     """
     kh, kw, cin, cout, stride = meta
-    patches, (B, Ho, Wo) = im2col(x, kh, kw, stride=stride)
-    patches = _pad_to(patches, sw.block[0], axis=1)
+    if stream and (mapping is None or mapping.op_class == "conv"):
+        if mapping is None:
+            mapping = resolve_conv_mapping(x, sw, meta)
+        if mapping is not None:
+            return fused_sparse_conv2d(x, sw, meta,
+                                       act_threshold=act_threshold,
+                                       mapping=mapping, interpret=interpret)
+        mapping = None          # no legal band tile: materialize instead
+    patches, (B, Ho, Wo) = im2col_streamed(x, kh, kw, stride=stride,
+                                           bk=sw.block[0])
+    assert patches.shape[1] == sw.shape[0], (patches.shape, sw.shape)
     if mapping is None:
         mapping = resolve_spmm_mapping(patches, sw)
     if act_threshold is not None:
@@ -84,6 +138,21 @@ def sparse_conv2d(x, sw: BlockSparseWeight, meta, *, act_threshold=None,
     else:
         y = block_spmm(patches, sw, mapping=mapping, interpret=interpret)
     return y[:, :cout].reshape(B, Ho, Wo, cout)
+
+
+def conv_schedule_stats(x_shape, sw: BlockSparseWeight, meta, *,
+                        dtype=jnp.float32, mapping: Mapping | None = None):
+    """Activation-DMA counters for a conv layer under the mapper-resolved
+    (or supplied) band tiling: streamed vs ideal vs materialized-im2col
+    bytes (see ref.conv_schedule_ref).  Resolution is shape-only, so the
+    counters describe the schedule the fused kernel would execute."""
+    from repro.kernels.ref import conv_schedule_ref
+    B, H, W, C = x_shape
+    if mapping is None:
+        x_spec = jax.ShapeDtypeStruct(tuple(x_shape), dtype)
+        mapping = resolve_conv_mapping(x_spec, sw, meta)
+    assert mapping is not None, "no legal streaming band tile for this conv"
+    return conv_schedule_ref(sw, meta, B, H, W, mapping)
 
 
 def pack_dense_weight(wm, *, density: float = 1.0, bk: int = 0, bn: int = 0,
@@ -111,15 +180,29 @@ def pack_dense_weight(wm, *, density: float = 1.0, bk: int = 0, bn: int = 0,
 
 
 def pack_conv_weight(w, bk: int = 0, bn: int = 0, density: float = 1.0,
-                     mask=None):
-    """(kh, kw, Cin, Cout) -> BCSC over the im2col matrix (padded).
+                     mask=None, *, stride: int = 1, magnitude: bool = False):
+    """(kh, kw, Cin, Cout) -> BCSC in the *streamed* K layout: Cin padded
+    per kernel offset to a bk multiple, K-blocks channel-block-major, so
+    each block decodes to one (kernel-offset, channel-block) pair and the
+    fused kernel can source activations straight from input row bands.
 
-    bk/bn == 0 => the mapper picks the sparse-format block granularity
-    (padding waste vs index overhead vs MXU tile quantum)."""
+    bk/bn == 0 => the mapper picks the channel-block granularity
+    (padding waste vs index overhead vs tile quantum, scored per offset)."""
     kh, kw, cin, cout = w.shape
-    wm = jnp.asarray(w).reshape(kh * kw * cin, cout)
-    sw = pack_dense_weight(wm, density=density, bk=bk, bn=bn, mask=mask)
-    return sw, (kh, kw, cin, cout, 1)
+    w = jnp.asarray(w)
+    if not (bk and bn):
+        from repro.mapper.search import default_mapper
+        gk, gn = default_mapper().conv_pack_granularity(cin, cout, w.dtype,
+                                                        density=density)
+        bk, bn = bk or gk, bn or gn
+    cin_pad = -(-cin // bk) * bk
+    Cb = cin_pad // bk
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, cin_pad - cin), (0, 0)))
+    wm = wp.reshape(kh, kw, Cb, bk, cout).transpose(2, 0, 1, 3, 4)
+    wm = wm.reshape(Cb * kh * kw * bk, cout)
+    sw = pack_dense_weight(wm, density=density, bk=bk, bn=bn, mask=mask,
+                           magnitude=magnitude)
+    return sw, (kh, kw, cin, cout, stride)
 
 
 def sparse_dense(x, sw: BlockSparseWeight, *, act_threshold=None,

@@ -81,3 +81,91 @@ def conv2d_ref(x, w, *, stride: int = 1, padding: str = "SAME"):
     return jax.lax.conv_general_dilated(
         x, w, (stride, stride), padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv_dual_ref(x, sw: BlockSparseWeight, meta, act_threshold, mapping):
+    """Oracle for the fused streaming conv's dual-sparse gate: a
+    (row-tile, K-block) activation *window* whose max-|.| is below the
+    threshold is treated as zero, at exactly the fused kernel's tile
+    granularity (bb images x hb output rows x Wo).  With
+    ``act_threshold=None`` this is the plain streamed-layout conv oracle."""
+    from repro.kernels.ops import im2col_streamed
+    kh, kw, cin, cout, stride = meta
+    bk = sw.block[0]
+    patches, (B, Ho, Wo) = im2col_streamed(x, kh, kw, stride=stride, bk=bk)
+    K = sw.shape[0]
+    assert patches.shape[1] == K, (patches.shape, sw.shape)
+    KB = K // bk
+    bb, hb = mapping.bb, min(mapping.bm, Ho)
+    nbands = Ho // hb
+    p = patches.reshape(B // bb, bb, nbands, hb * Wo, KB, bk)
+    if act_threshold is not None:
+        keep = jnp.abs(p).max(axis=(1, 3, 5)) > act_threshold
+        p = p * keep[:, None, :, None, :, None].astype(p.dtype)
+    y = p.reshape(B * Ho * Wo, K) @ unpack(sw).astype(x.dtype)
+    return y[:, :cout].reshape(B, Ho, Wo, cout)
+
+
+def conv_schedule_ref(sw: BlockSparseWeight, meta, B: int, H: int, W: int,
+                      mapping) -> dict:
+    """Activation-DMA counters for the fused streaming conv vs the
+    materialized im2col path, by *simulating the slot walk* the kernel's
+    grid executes.
+
+    The fused kernel's x operand is a halo'd input row band whose BlockSpec
+    index depends only on (row tile, channel block); Pallas re-issues the
+    DMA exactly when that index changes between consecutive grid steps, so
+    the streamed traffic is the transition count times the band size.  The
+    ideal charges each needed channel slice of the SAME-padded input once
+    per output-column pass (fetch-once / reuse-kh*kw); the halo replication
+    of multi-band tilings is the only excess, so streamed/ideal is bounded
+    independent of kh*kw — while the materialized path pays the patch-
+    matrix write plus a (bm, bk) tile fetch per slot, both proportional to
+    the kh*kw-times larger M*K.
+    """
+    import numpy as np
+
+    from repro.mapper.cost import conv_band_rows, conv_padded_wh
+    kh, kw, cin, cout, stride = meta
+    bk, bn = sw.block
+    kk = kh * kw
+    esize = jnp.dtype(sw.blocks.dtype).itemsize
+    Ho, Wo = -(-H // stride), -(-W // stride)
+    Hp, Wp = conv_padded_wh(Ho, Wo, kh, kw, stride)
+    M, K = B * Ho * Wo, sw.shape[0]
+    bb, hb = mapping.bb, min(mapping.bm, Ho)
+    nbands = Ho // hb
+    band = conv_band_rows(hb, kh, stride)
+    mtiles = (B // bb) * nbands
+
+    idx = np.asarray(sw.idx)
+    offs = np.asarray(sw.offsets)
+    cbs = np.maximum(idx, 0) // kk
+    # per row tile, one fetch at walk entry plus one per cb transition
+    fetches = 1 + int((cbs[1:] != cbs[:-1]).sum()) if idx.size else 0
+    band_bytes = bb * band * Wp * bk * esize
+    streamed = mtiles * fetches * band_bytes
+
+    # ideal: each column pass streams each channel slice it touches once,
+    # over the halo-free padded input
+    distinct = 0
+    for j in range(len(offs) - 1):
+        seg = cbs[offs[j]:offs[j + 1]][idx[offs[j]:offs[j + 1]] >= 0]
+        distinct += len(np.unique(seg))
+    ideal = max(distinct, 1) * B * Hp * Wp * bk * esize
+
+    # materialized im2col: write the (M, K) patch matrix once, then fetch
+    # one (bm, bk) x tile per slot per row tile (= M*bk per slot)
+    materialized = M * K * esize + M * bk * esize * sw.num_slots
+    return {
+        "row_tiles": mtiles,
+        "grid_steps": mtiles * sw.num_slots,
+        "band_fetches": mtiles * fetches,
+        "band_bytes": band_bytes,
+        "streamed_x_bytes": streamed,
+        "ideal_x_bytes": ideal,
+        "materialized_x_bytes": materialized,
+        "im2col_hbm_bytes": M * K * esize,
+        "stream_vs_ideal": streamed / ideal,
+        "materialized_vs_streamed": materialized / max(streamed, 1),
+    }

@@ -142,6 +142,88 @@ def matmul_vmem_bytes(mapping: Mapping, dtype) -> int:
     return (bm * bk + bk * bn) * esize + bm * bn * esize + bm * bn * 4
 
 
+# ------------------------------------------------------------ streaming conv
+
+
+def conv_band_rows(hb: int, kh: int, stride: int) -> int:
+    """Input rows resident per band tile of ``hb`` output rows: the strided
+    span plus the (kh - stride) halo shared with the next band."""
+    return (hb - 1) * stride + kh
+
+
+def conv_padded_wh(Ho: int, Wo: int, kh: int, kw: int, stride: int
+                   ) -> tuple[int, int]:
+    """(Hp, Wp) extent of the SAME-padded input the streamed kernel reads
+    (asymmetric even-kernel padding included; see ops.im2col)."""
+    return (Ho - 1) * stride + kh, (Wo - 1) * stride + kw
+
+
+def conv_vmem_bytes(mapping: Mapping, Wo: int, kh: int, kw: int, stride: int,
+                    dtype) -> int:
+    """Resident VMEM for one grid step of the fused implicit-im2col conv
+    kernel: the halo'd activation row band (bb images x band_rows x Wp x bk
+    channels), one weight block, and the out tile + f32 accumulator.  This
+    is the legality bound the issue calls "halo rows per bm tile fit VMEM":
+    bm (= hb output rows) is only legal if its input band is resident."""
+    bb, hb, bk, bn = mapping.bb, mapping.bm, mapping.bk, mapping.bn
+    esize = itemsize(dtype)
+    # a band of hb output rows reads exactly the padded extent of hb rows
+    band, wp = conv_padded_wh(hb, Wo, kh, kw, stride)
+    x_bytes = bb * band * wp * bk * esize
+    w_bytes = bk * bn * esize
+    out_bytes = bb * hb * Wo * bn * (esize + 4)      # out tile + f32 acc
+    return x_bytes + w_bytes + out_bytes
+
+
+def score_conv(mapping: Mapping, B: int, Ho: int, Wo: int, kh: int, kw: int,
+               stride: int, N: int, dtype, *, Cin: int | None = None,
+               act_occupancy: float = 1.0,
+               nnz_blocks: float | None = None,
+               sched_slots: float | None = None,
+               occupancy: float = 1.0) -> float:
+    """Estimated seconds for a fused streaming conv under ``mapping``.
+
+    The decisive difference from ``score_matmul`` on the im2col view is the
+    activation stream term: the fused kernel sources x from resident input
+    row bands, and consecutive slots that share a channel block (all kh*kw
+    kernel offsets — the pack orders K-blocks channel-block-major) reuse
+    the fetched band, so activation traffic is proportional to the *input*
+    footprint B*Hp*Wp*Cin per channel-block run — not to the kh*kw-times
+    larger im2col matrix M*K (see ref.conv_schedule_ref for the exact
+    walk-simulated counter this approximates).
+    """
+    bb, hb, bk, bn = mapping.bb, mapping.bm, mapping.bk, mapping.bn
+    esize = itemsize(dtype)
+    kk = kh * kw
+    nb = math.ceil(N / bn)
+    M = B * Ho * Wo
+
+    if nnz_blocks is None:
+        # occupancy fallback: Cb channel blocks per offset, per column
+        cb_blocks = math.ceil((Cin or bk) / bk)
+        nnz_blocks = cb_blocks * kk * occupancy * nb
+    if sched_slots is None:
+        sched_slots = max(nnz_blocks, nb)
+
+    mtiles = math.ceil(B / bb) * math.ceil(Ho / hb)
+    band, wp = conv_padded_wh(hb, Wo, kh, kw, stride)
+
+    util = (_align_util(bb * hb * Wo, sublane(dtype)) * _align_util(bk, LANE)
+            * _align_util(bn, LANE))
+    macs = 2.0 * M * bk * bn * nnz_blocks * act_occupancy
+    t_compute = compute_term(macs, PEAK_FLOPS * util)
+
+    # channel-block runs: kh*kw consecutive slots share one band fetch
+    runs = max(sched_slots / kk, nb)
+    x_bytes = mtiles * runs * bb * band * wp * bk * esize
+    w_bytes = bk * bn * esize * sched_slots * mtiles
+    o_bytes = M * N * esize
+    t_stream = stream_term(x_bytes + w_bytes + o_bytes, HBM_BW)
+
+    steps = mtiles * max(sched_slots, nb)
+    return max(t_compute, t_stream) + steps * STEP_OVERHEAD_S
+
+
 # ------------------------------------------------------------ attention
 
 

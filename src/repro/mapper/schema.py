@@ -9,13 +9,23 @@ the OpenEye cluster array re-synthesizes the fabric.
 
 Field conventions per op class (see DESIGN.md §Mapper):
 
-  dense / spmm / conv (im2col matmul view, x:(M,K) @ w:(K,N)):
+  dense / spmm (im2col matmul view, x:(M,K) @ w:(K,N)):
       bm, bk, bn : grid tile edges along M / K / N
       wbk, wbn   : sparse-format block granularity (BCSC pack time);
                    for an already-packed weight these are fixed = sw.block
       k_split    : contraction split factor (reserved; kernels currently
                    accumulate the full K walk in one VMEM scratch, so the
                    legal space enumerates k_split == 1 only)
+
+  conv (fused implicit-im2col, x:(B,H,W,Cin) streamed as row bands —
+        see DESIGN.md §Streaming conv dataflow):
+      bb         : batch tile (images resident per grid step)
+      bm         : output rows per band tile (hb; the row tile covers
+                   bb*bm*Wo output pixels, with a (bm-1)*stride+kh input
+                   row halo resident in VMEM)
+      bk         : channel-block edge of the streamed activation operand
+                   (= wbk, the pack granularity over Cin)
+      bn         : output-channel tile (= wbn)
 
   attention (q:(B,Sq,Hq,D) vs kv:(B,Skv,Hkv,D)):
       bm = block_q, bk = block_kv, bn = head_dim (informational)
@@ -36,6 +46,7 @@ class Mapping:
     k_split: int = 1
     wbk: int = 0
     wbn: int = 0
+    bb: int = 1          # conv only: batch tile (images per grid step)
 
     # ---- attention-flavoured aliases ----
     @property
@@ -50,6 +61,7 @@ class Mapping:
         """Grid implied by this mapping for a problem ``shape``.
 
         matmul-like: shape = (M, K, N) -> (M//bm, N//bn, K-walk length)
+        conv:        shape = (B, Ho) -> ((B//bb) * (Ho//bm), slots)
         attention:   shape = (B, Sq, Skv, Hkv) -> (B, Hkv, Sq//bq, Skv//bkv)
 
         ``slots`` (a packed weight's compacted schedule length
@@ -61,6 +73,10 @@ class Mapping:
         if self.op_class == "attention":
             B, Sq, Skv, Hkv = shape
             return (B, Hkv, -(-Sq // self.bm), -(-Skv // self.bk))
+        if self.op_class == "conv":
+            B, Ho = shape[:2]
+            assert slots is not None, "conv grids walk the compacted slots"
+            return (-(-B // self.bb) * -(-Ho // self.bm), slots)
         M, K, N = shape
         if slots is not None:
             return (-(-M // self.bm), slots)

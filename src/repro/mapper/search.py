@@ -65,6 +65,62 @@ class Mapper:
         self._commit(key, best)
         return best
 
+    # ------------------------------------------------------------ conv
+
+    def conv(self, B: int, H: int, W: int, Cin: int, Cout: int, kh: int,
+             kw: int, stride: int, dtype, *, wbk: int, wbn: int,
+             occupancy: float = 1.0, act_occupancy: float = 1.0,
+             nnz_blocks: Optional[int] = None,
+             sched_slots: Optional[int] = None,
+             refine: Optional[Callable[[Mapping], float]] = None
+             ) -> Optional[Mapping]:
+        """Best band-tile mapping for the fused streaming conv
+        (op_class "conv"): batch tile bb and band height bm, with bk/bn
+        pinned to the weight's pack granularity.  Legality requires the
+        halo'd input band of each bm tile to be VMEM-resident; the cost
+        model charges streamed-activation bytes proportional to the input
+        footprint B*Hp*Wp*Cin, not the materialized im2col M*K."""
+        Ho, Wo = -(-H // stride), -(-W // stride)
+        key = mapping_key(
+            "conv", (B, H, W, Cin, Cout, kh, kw, stride, wbk, wbn), dtype,
+            occupancy, act_density=act_occupancy)
+        hit = self.cache.get(key)
+        if (hit is not None
+                and S.is_legal(hit, (B, Ho, Wo), dtype,
+                               vmem_budget=self.vmem_budget,
+                               conv_geom=(kh, kw, stride))
+                and hit.bk == wbk and hit.bn == wbn):
+            return hit
+        cands = S.enumerate_conv(B, Ho, Wo, kh, kw, stride, dtype,
+                                 wbk=wbk, wbn=wbn,
+                                 vmem_budget=self.vmem_budget)
+        if not cands:
+            return None          # no legal band tile: caller falls back
+        scored = sorted(cands, key=lambda m: C.score_conv(
+            m, B, Ho, Wo, kh, kw, stride, Cout, dtype, Cin=Cin,
+            act_occupancy=act_occupancy, nnz_blocks=nnz_blocks,
+            sched_slots=sched_slots, occupancy=occupancy))
+        best = self._refine(scored, refine)
+        self._commit(key, best)
+        return best
+
+    def conv_pack_granularity(self, cin: int, cout: int, dtype, *,
+                              density: float = 1.0) -> tuple[int, int]:
+        """BCSC block granularity for a streamed conv weight: the K-block
+        edge is a *channel* block (Cin is padded per kernel offset to a
+        bk multiple, so each K-block decodes to one (offset, channel-block)
+        pair — DESIGN.md §Streaming conv dataflow), scored per offset with
+        the shared pack model."""
+        key = mapping_key("conv", (0, cin, cout), dtype, density)
+        hit = self.cache.get(key)
+        if hit is not None and hit.wbk > 0 and hit.wbn > 0:
+            return hit.wbk, hit.wbn
+        cands = S.enumerate_pack(cin, cout, dtype)
+        wbk, wbn = min(cands, key=lambda g: C.score_pack(
+            g[0], g[1], cin, cout, dtype, density=density))
+        self._commit(key, Mapping("conv", wbk=wbk, wbn=wbn))
+        return wbk, wbn
+
     # ------------------------------------------------------------ attention
 
     def attention(self, B: int, Sq: int, Skv: int, Hkv: int, G: int, D: int,

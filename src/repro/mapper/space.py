@@ -18,7 +18,6 @@ Legality rules (DESIGN.md §Mapper):
 """
 from __future__ import annotations
 
-import math
 
 from repro.mapper import cost as C
 from repro.mapper.schema import Mapping
@@ -69,6 +68,30 @@ def enumerate_matmul(M: int, K: int, N: int, dtype, *,
     return out
 
 
+def enumerate_conv(B: int, Ho: int, Wo: int, kh: int, kw: int, stride: int,
+                   dtype, *, wbk: int, wbn: int,
+                   vmem_budget: int = C.VMEM_BUDGET) -> list[Mapping]:
+    """Legal (bb, hb) band tiles for the fused implicit-im2col conv kernel.
+
+    bk/bn are pinned to the weight's pack granularity (the channel-block
+    edge and output-channel tile).  The free dimensions are the batch tile
+    ``bb`` (images resident per step) and the band height ``bm`` (output
+    rows per tile): both must divide their problem dims — the band gather
+    replicates the (kh - stride)-row halo per band, so bands tile Ho
+    disjointly — and the halo'd input band must fit VMEM alongside the out
+    tile ("halo rows per bm tile fit VMEM")."""
+    bbs = _divisors_up_to(B, B)
+    hbs = _divisors_up_to(Ho, Ho)
+    out = []
+    for bb in bbs:
+        for hb in hbs:
+            m = Mapping("conv", bm=hb, bk=wbk, bn=wbn, wbk=wbk, wbn=wbn,
+                        bb=bb)
+            if C.conv_vmem_bytes(m, Wo, kh, kw, stride, dtype) <= vmem_budget:
+                out.append(m)
+    return out
+
+
 def enumerate_attention(B: int, Sq: int, Skv: int, Hkv: int, G: int, D: int,
                         dtype, *, vmem_budget: int = C.VMEM_BUDGET
                         ) -> list[Mapping]:
@@ -98,11 +121,21 @@ def enumerate_pack(K: int, N: int, dtype) -> list[tuple[int, int]]:
 
 
 def is_legal(mapping: Mapping, shape: tuple, dtype, *,
-             vmem_budget: int = C.VMEM_BUDGET, G: int = 1, D: int = 0) -> bool:
+             vmem_budget: int = C.VMEM_BUDGET, G: int = 1, D: int = 0,
+             conv_geom: tuple | None = None) -> bool:
     """Validity check for an externally supplied mapping (cache entries,
-    hand-written configs)."""
+    hand-written configs).  For conv mappings pass
+    ``conv_geom = (kh, kw, stride)``; shape is (B, Ho, Wo)."""
     if mapping.k_split != 1:
         return False
+    if mapping.op_class == "conv":
+        B, Ho, Wo = shape
+        kh, kw, stride = conv_geom
+        return (mapping.bb > 0 and B % mapping.bb == 0
+                and mapping.bm > 0 and Ho % mapping.bm == 0
+                and mapping.bk > 0 and mapping.bn > 0
+                and C.conv_vmem_bytes(mapping, Wo, kh, kw, stride, dtype)
+                <= vmem_budget)
     if mapping.op_class == "attention":
         B, Sq, Skv, Hkv = shape
         return (mapping.bm > 0 and Sq % mapping.bm == 0

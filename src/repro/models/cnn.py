@@ -1,8 +1,10 @@
 """The paper's evaluation network (Table 2): 8-bit-quantizable MNIST CNN.
 
-Runs end-to-end on the OpenEye sparse kernels (im2col + block_spmm /
-dual_sparse) — the faithful-reproduction workload for Table 3 / Fig 6.
-~2.13 MOPs per inference (verified in benchmarks/table2_cnn.py).
+Runs end-to-end on the OpenEye sparse kernels — convolutions through the
+fused implicit-im2col streaming kernel (`kernels/conv_spmm.py`), dense
+layers through block_spmm / dual_sparse — the faithful-reproduction
+workload for Table 3 / Fig 6.  ~2.13 MOPs per inference (verified in
+benchmarks/table2_cnn.py).
 """
 from __future__ import annotations
 
@@ -66,12 +68,10 @@ def pack_cnn(params, cfg: CNNConfig, *, density: float = 1.0, bk=0, bn=0):
     packed = []
     for p, layer in zip(params, cfg.layers):
         if layer.kind == "conv":
-            kh, kw, cin, cout = p["w"].shape
-            wm = p["w"].reshape(kh * kw * cin, cout)
-            packed.append({"sw": K.pack_dense_weight(
-                               wm, density=density, bk=bk, bn=bn,
-                               magnitude=True),
-                           "meta": (kh, kw, cin, cout, 1)})
+            sw, meta = K.pack_conv_weight(p["w"], bk=bk, bn=bn,
+                                          density=density, magnitude=True,
+                                          stride=layer.stride)
+            packed.append({"sw": sw, "meta": meta})
         elif layer.kind == "dense":
             packed.append({"sw": K.pack_dense_weight(
                                p["w"], density=density, bk=bk, bn=bn,
@@ -82,34 +82,48 @@ def pack_cnn(params, cfg: CNNConfig, *, density: float = 1.0, bk=0, bn=0):
     return packed
 
 
-def schedule_report(packed, cfg: CNNConfig) -> list:
+def schedule_report(packed, cfg: CNNConfig, *, batch: int = 1) -> list:
     """Per-layer compaction counters for a packed network: stored nonzero
     blocks (the sum(nnz) ideal), the compacted slot-walk length the kernels
     actually execute, and what the legacy padded (Nb, max_nnz) layout would
     have paid — the format-level view of the paper's "no unnecessary
-    computations or memory accesses" claim."""
+    computations or memory accesses" claim.  Conv layers additionally get
+    the streaming-dataflow counters (`ops.conv_schedule_stats`): streamed
+    vs ideal vs materialized-im2col activation HBM bytes."""
     report = []
+    h, w, c = (*cfg.input_hw, cfg.input_ch)
     for i, (p, layer) in enumerate(zip(packed, cfg.layers)):
+        if layer.kind == "pool":
+            h, w = h // layer.pool, w // layer.pool
         sw = p.get("sw")
         if sw is None:
             continue
-        report.append({
+        row = {
             "layer": i, "kind": layer.kind, "shape": sw.shape,
             "block": sw.block, "density": sw.density,
             "nnz_blocks": sw.nnz_blocks, "slots": sw.num_slots,
             "padded_slots": sw.padded_slots,
-        })
+        }
+        if layer.kind == "conv":
+            row.update(K.conv_schedule_stats((batch, h, w, c), sw,
+                                             p["meta"]))
+            c = layer.out_ch
+            h, w = -(-h // layer.stride), -(-w // layer.stride)
+        report.append(row)
     return report
 
 
 def forward_sparse(packed, cfg: CNNConfig, x, *, act_threshold=None,
-                   interpret: bool = True):
-    """x: (B, 28, 28, 1) -> logits (B, 10), via the Pallas sparse kernels."""
+                   interpret: bool = True, stream: bool = True):
+    """x: (B, 28, 28, 1) -> logits (B, 10), via the Pallas sparse kernels.
+    Convolutions run through the fused streaming kernel by default;
+    ``stream=False`` keeps the materialized im2col oracle path."""
+    from repro.models.layers import make_sparse_conv_apply
+    conv_apply = make_sparse_conv_apply(act_threshold=act_threshold,
+                                        interpret=interpret, stream=stream)
     for p, layer in zip(packed, cfg.layers):
         if layer.kind == "conv":
-            x = K.sparse_conv2d(x, p["sw"], p["meta"],
-                                act_threshold=act_threshold,
-                                interpret=interpret)
+            x = conv_apply(x, p)
             x = jax.nn.relu(x)
         elif layer.kind == "pool":
             x = jax.lax.reduce_window(

@@ -10,7 +10,6 @@ sinusoids added by the frontend).
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -11,9 +11,7 @@ the activations a PE column actually needs.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -390,6 +388,22 @@ def make_sparse_apply(packed: dict, cfg: ModelConfig, *, act_threshold=None,
         y = sparse_dense(x, packed[name], act_threshold=act_threshold,
                          interpret=interpret)
         return y[..., :out_dim[name]]
+
+    return apply
+
+
+def make_sparse_conv_apply(*, act_threshold=None, interpret: bool = True,
+                           stream: bool = True):
+    """Build the conv-layer hook for CNN forwards from packed streamed-
+    layout BCSC weights (`ops.pack_conv_weight`): each conv runs through
+    the fused implicit-im2col streaming kernel (``stream=False`` selects
+    the materialized im2col oracle path instead)."""
+    from repro.kernels.ops import sparse_conv2d
+
+    def apply(x, entry):
+        return sparse_conv2d(x, entry["sw"], entry["meta"],
+                             act_threshold=act_threshold,
+                             interpret=interpret, stream=stream)
 
     return apply
 

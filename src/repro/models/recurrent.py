@@ -12,13 +12,11 @@ Both are adapted for the TPU mesh:
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import init_rmsnorm
 from repro.sharding.partition import shard
 
 # ================================================================= RG-LRU

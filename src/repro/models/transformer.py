@@ -13,8 +13,7 @@ Modes:
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

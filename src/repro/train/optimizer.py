@@ -7,9 +7,7 @@ factored second moment for memory-constrained very large models.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -47,7 +47,6 @@ def main():
     # --- sharded under the 3-axis mini production mesh
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     with sp.use_mesh(mesh):
-        pspecs = sp.param_pspecs(params)
         shardings = sp.param_shardings(params)
         sharded_params = jax.tree_util.tree_map(jax.device_put, params,
                                                 shardings)

@@ -2,7 +2,6 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from repro.configs import get_config, reduced
-from repro.launch import specs as SP
 from repro.models import model_api
 from repro.sharding import partition as sp
 from repro.train.optimizer import OptConfig, init_opt_state

@@ -1,5 +1,4 @@
 """Optimizer / loss / checkpoint / data / FT substrate tests."""
-import math
 import os
 
 import jax
@@ -11,7 +10,7 @@ from repro.checkpoint import AsyncCheckpointer, restore, save
 from repro.data import PackedSyntheticData, Prefetcher
 from repro.ft.heartbeat import Heartbeat, Watchdog
 from repro.train.loss import cross_entropy
-from repro.train.optimizer import (OptConfig, adamw_update, global_norm,
+from repro.train.optimizer import (OptConfig, adamw_update, 
                                    init_opt_state, lr_schedule)
 
 # ---------------------------------------------------------------- optimizer
@@ -139,7 +138,6 @@ def test_data_determinism_and_packing():
 
 
 def test_data_host_sharding_disjoint():
-    full = PackedSyntheticData(1000, 4, 32, seed=5)
     h0 = PackedSyntheticData(1000, 4, 32, seed=5, host_id=0, n_hosts=2)
     h1 = PackedSyntheticData(1000, 4, 32, seed=5, host_id=1, n_hosts=2)
     b0, b1 = h0.batch_at(0), h1.batch_at(0)
